@@ -1,0 +1,75 @@
+"""Paper Figure 3/4 + Table 9: attention latency, dense vs SFA, sweeping
+(k, d, n).
+
+CPU wall-clock of interpret-mode Pallas kernels is NOT representative of TPU
+latency, so each row reports BOTH the measured microseconds (relative trends
+only) and the analytic HBM-byte model that determines latency in the
+memory-bound regimes the paper targets (decode / long context):
+
+    t_tpu ≈ max(flops / 197e12, bytes / 819e9)
+
+The derived column is the dense/SFA byte ratio — the paper's Table 9 speedup
+driver (their own Table 7 shows the GPU kernel is bandwidth-bound too).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import rtopk_ref
+from repro.kernels import flash_sfa, flash_attention
+from repro.utils.roofline import PEAK_FLOPS, HBM_BW
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+def sfa_bytes(n: int, d: int, k: int, dv: int) -> float:
+    """Per-(bh) HBM bytes: sparse Q/K codes + dense V + output."""
+    return n * k * (2 + 2) * 2 + n * dv * 2 * 2           # vals+idx(q,k) + v,o
+
+
+def dense_bytes(n: int, d: int, dv: int) -> float:
+    return n * d * 2 * 2 + n * dv * 2 * 2
+
+
+def attn_flops(n: int, d: int, dv: int) -> float:
+    return 2 * n * n / 2 * (d + dv)                       # causal
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    ns = [256, 512] if quick else [256, 512, 1024, 2048]
+    configs = [(64, 8), (64, 4), (128, 16), (128, 8)]
+    bh = 2
+    for n in ns:
+        for d, k in configs:
+            q = jax.random.normal(rng, (bh, n, d), jnp.float32)
+            kk = jax.random.normal(jax.random.fold_in(rng, 1), (bh, n, d))
+            v = jax.random.normal(jax.random.fold_in(rng, 2), (bh, n, d))
+            qv, qi = rtopk_ref(q, k)
+            kv_, ki = rtopk_ref(kk, k)
+            t_sfa = _time(lambda *a: flash_sfa(*a, d=d, block_q=128,
+                                               block_k=128),
+                          qv, qi, kv_, ki, v)
+            t_dense = _time(lambda *a: flash_attention(*a, block_q=128,
+                                                       block_k=128),
+                            q, kk, v)
+            br = dense_bytes(n, d, d) / sfa_bytes(n, d, k, d)
+            tpu_dense = max(attn_flops(n, d, d) / PEAK_FLOPS,
+                            dense_bytes(n, d, d) / HBM_BW) * 1e6
+            tpu_sfa = max(attn_flops(n, d, d) / PEAK_FLOPS,
+                          sfa_bytes(n, d, k, d) / HBM_BW) * 1e6
+            rows.append((f"attn_n{n}_d{d}_k{k}", t_sfa,
+                         f"dense_us={t_dense:.0f};byte_ratio={br:.2f};"
+                         f"tpu_model_speedup={tpu_dense / tpu_sfa:.2f}"))
+    return rows

@@ -1,0 +1,56 @@
+"""Paper Table 6: operation counts, dense vs SFA attention.
+
+On GPU the paper converts FLOPs into integer intersection ops; on TPU our
+FlashSFA keeps MXU compute dense and cuts HBM bytes instead (DESIGN.md §2).
+This benchmark reports, per (n, d, k):
+  * XLA cost_analysis FLOPs of the lowered dense vs SFA attention step
+    (the decode path genuinely drops FLOPs via the gather formulation);
+  * the analytic byte counts whose ratio is the paper's k-driven win.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import chunked_attention, sfa_attention
+from repro.models.attention import _gather_score  # decode scoring primitive
+from repro.serve.kv_cache import sparse_k_bytes, dense_k_bytes
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def run(quick: bool = True):
+    rows = []
+    b, h = 1, 4
+    for n in ((1024, 4096) if quick else (1024, 4096, 8192, 16384)):
+        for d, k in ((64, 8), (128, 16)):
+            q = jax.ShapeDtypeStruct((b, n, h, d), jnp.bfloat16)
+            kv = jax.ShapeDtypeStruct((b, n, h, d), jnp.bfloat16)
+            # prefill: dense vs SFA (TPU design keeps matmul flops ~equal)
+            f_dense = _flops(lambda q, kk, v: chunked_attention(q, kk, v),
+                             q, kv, kv)
+            # decode scoring: dense matvec vs sparse gather-score
+            qd = jax.ShapeDtypeStruct((b, h, d), jnp.float32)
+            kvals = jax.ShapeDtypeStruct((b, n, h, k), jnp.bfloat16)
+            kidx = jax.ShapeDtypeStruct((b, n, h, k), jnp.int32)
+            f_gather = _flops(lambda q, kv_, ki: _gather_score(q, kv_, ki, 1.0),
+                              qd, kvals, kidx)
+            kfull = jax.ShapeDtypeStruct((b, n, h, d), jnp.bfloat16)
+            f_densescore = _flops(
+                lambda q, kk: jnp.einsum("bhd,bnhd->bnh",
+                                         q, kk.astype(jnp.float32)),
+                qd, kfull)
+            rows.append((
+                f"flops_n{n}_d{d}_k{k}", 0.0,
+                f"prefill_dense_GF={f_dense / 1e9:.2f};"
+                f"decode_score_dense_MF={f_densescore / 1e6:.2f};"
+                f"decode_score_sfa_MF={f_gather / 1e6:.2f};"
+                f"decode_flop_ratio={f_densescore / max(f_gather, 1):.1f};"
+                f"kbyte_ratio={dense_k_bytes(n, d) / sparse_k_bytes(n, k, d):.2f}"))
+    return rows

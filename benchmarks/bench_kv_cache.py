@@ -1,0 +1,41 @@
+"""Paper Figure 5 + Appendix J: KV-cache size & decode-latency scaling with
+context length, dense vs SFA.
+
+Derived values are the byte-exact cache model (serve/kv_cache.py — the same
+accounting the decode kernels realize) and the App-J closed form 2d/(3k+4),
+asserted to agree. Decode roofline time uses v5e HBM bandwidth.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.serve.kv_cache import (cache_bytes_per_token, sparse_k_bytes,
+                                  dense_k_bytes, memory_ratio_appendix_j)
+from repro.utils.roofline import HBM_BW
+
+
+def run(quick: bool = True):
+    rows = []
+    # Appendix J formula vs byte accounting (d=128, k grid — paper's Fig 5)
+    for k in (4, 8, 16, 32):
+        d, n = 128, 65536
+        ratio_fact = dense_k_bytes(n, d) / sparse_k_bytes(n, k, d)
+        ratio_formula = memory_ratio_appendix_j(d, k)
+        rows.append((f"kcache_ratio_d{d}_k{k}", 0.0,
+                     f"bytes_ratio={ratio_fact:.2f};"
+                     f"appendixJ={ratio_formula:.2f}"))
+    # whole-model cache scaling with context (Fig 5 right)
+    for arch in ("llama3-8b", "gemma3-4b", "deepseek-v2-236b"):
+        cfg = get_config(arch)
+        per = cache_bytes_per_token(cfg)
+        for n in (4096, 32768, 131072) if quick else \
+                (4096, 16384, 65536, 262144, 524288):
+            dense_gb = per["dense"] * n / 2**30
+            sfa_gb = per["sfa"] * n / 2**30
+            t_dense = per["dense"] * n / HBM_BW * 1e3     # ms per decode pass
+            t_sfa = per["sfa"] * n / HBM_BW * 1e3
+            rows.append((f"kvscale_{arch}_n{n}", t_sfa * 1e3,
+                         f"dense_GiB={dense_gb:.2f};sfa_GiB={sfa_gb:.2f};"
+                         f"saving={1 - sfa_gb / dense_gb:.1%};"
+                         f"decode_ms_dense={t_dense:.2f};"
+                         f"decode_ms_sfa={t_sfa:.2f}"))
+    return rows

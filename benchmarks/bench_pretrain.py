@@ -1,0 +1,69 @@
+"""Paper Table 1: pretraining parity — dense vs short-embedding vs SFA.
+
+Trains three tiny GPT-2-family models (identical except the attention
+variant) on the synthetic Markov LM for a few hundred steps and reports
+validation loss. The paper's claim to reproduce: SFA ≈ dense ≫ short
+embeddings at matched step count (Table 1's PPL ordering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, paper_models
+from repro.data import DataConfig, markov_batch
+from repro.models import init as model_init
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step, make_eval_step
+
+
+def _train(cfg, steps, dcfg, seed=0):
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=max(steps // 20, 5),
+                           total_steps=steps)
+    params = model_init(jax.random.PRNGKey(seed), cfg)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    evalf = jax.jit(make_eval_step(cfg))
+    t0 = time.perf_counter()
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, s).items()}
+        params, opt, m = step(params, opt, b)
+    dt = (time.perf_counter() - t0) / steps * 1e6
+    # held-out eval on unseen steps
+    losses = []
+    for s in range(10_000, 10_004):
+        b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, s).items()}
+        losses.append(float(evalf(params, b)["ce"]))
+    return sum(losses) / len(losses), dt
+
+
+def run(quick: bool = True):
+    steps = 300 if quick else 600
+    rows = []
+    base = dataclasses.replace(
+        get_config("gpt2-small").reduced(), num_layers=2)
+    dcfg = DataConfig(vocab_size=base.vocab_size, seq_len=128, global_batch=8,
+                      seed=11)
+    variants = {
+        "dense": base,
+        "short": paper_models.short_embedding(base),
+        "sfa_k8": dataclasses.replace(
+            base, attention=dataclasses.replace(base.attention, sfa_k=8)),
+        "sfa_k4": dataclasses.replace(
+            base, attention=dataclasses.replace(base.attention, sfa_k=4)),
+    }
+    results = {}
+    for name, cfg in variants.items():
+        loss, us = _train(cfg, steps, dcfg)
+        results[name] = loss
+        rows.append((f"pretrain_{name}", us, f"val_loss={loss:.4f}"))
+    # the paper's ordering claim (Table 1): SFA tracks dense; short degrades
+    gap_sfa = results["sfa_k8"] - results["dense"]
+    gap_short = results["short"] - results["dense"]
+    rows.append(("pretrain_parity", 0.0,
+                 f"sfa_gap={gap_sfa:.4f};short_gap={gap_short:.4f};"
+                 f"paper_ordering_holds={gap_sfa <= gap_short + 0.05}"))
+    return rows

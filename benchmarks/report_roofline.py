@@ -1,0 +1,50 @@
+"""Render the EXPERIMENTS.md §Roofline table from dry-run JSON results.
+
+    PYTHONPATH=src python -m benchmarks.report_roofline \
+        results/dryrun_single_pod_opt.json [--md]
+"""
+import argparse
+import json
+
+
+def fmt_t(x):
+    return f"{x:.2e}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = json.load(open(args.results))
+
+    if args.md:
+        print("| arch | shape | t_compute | t_memory | t_collective | "
+              "bottleneck | MODEL/HLO flops | bytes/dev |")
+        print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            if args.md:
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"*skipped: {r['reason'][:58]}* | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:60]} |")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("model_flops", 0) / max(rf.get("flops", 1), 1)
+        mem = r.get("bytes_per_device", 0) / 2**30
+        if args.md:
+            print(f"| {r['arch']} | {r['shape']} | {fmt_t(rf['t_compute_s'])} "
+                  f"| {fmt_t(rf['t_memory_s'])} | "
+                  f"{fmt_t(rf['t_collective_s'])} | {rf['bottleneck']} | "
+                  f"{ratio:.2f} | {mem:.2f} GiB |")
+        else:
+            print(f"{r['arch']:22s} {r['shape']:12s} "
+                  f"tc={fmt_t(rf['t_compute_s'])} tm={fmt_t(rf['t_memory_s'])} "
+                  f"tx={fmt_t(rf['t_collective_s'])} {rf['bottleneck']:10s} "
+                  f"useful={ratio:.2f} mem={mem:.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

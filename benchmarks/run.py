@@ -1,0 +1,59 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+    bench_attention  -> Figure 3/4, Table 9 (latency vs k, d, n)
+    bench_kv_cache   -> Figure 5, Appendix J (cache bytes, decode roofline)
+    bench_flops      -> Table 6 (op counts dense vs SFA)
+    bench_topk       -> Table 8 (RTopK overhead share)
+    bench_pretrain   -> Table 1 (dense vs short-embedding vs SFA parity)
+    bench_niah       -> Table 2 / Appendix K (NIAH accuracy & generalization)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_attention, bench_kv_cache, bench_flops,
+                        bench_topk, bench_pretrain, bench_niah)
+
+SUITES = {
+    "attention": bench_attention,
+    "kv_cache": bench_kv_cache,
+    "flops": bench_flops,
+    "topk": bench_topk,
+    "pretrain": bench_pretrain,
+    "niah": bench_niah,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full sweeps (default: quick)")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.monotonic()
+        try:
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+        except Exception as e:                         # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.monotonic() - t0:.0f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

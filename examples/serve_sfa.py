@@ -1,0 +1,54 @@
+"""Serving example: batched decode from a sparse KV cache.
+
+    PYTHONPATH=src python examples/serve_sfa.py --arch llama3.2-3b
+
+Builds the (reduced) model, submits several concurrent requests to the
+DecodeEngine (batch-1 prefill -> slot insert -> batched decode steps), and
+prints the sparse-vs-dense cache footprint for the session.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init
+from repro.serve import DecodeEngine, EngineConfig, cache_stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = init(rng, cfg)
+    eng = DecodeEngine(params, cfg, EngineConfig(max_slots=4, max_len=128))
+
+    rs = np.random.RandomState(0)
+    slots = []
+    for i in range(args.requests):
+        prompt = rs.randint(0, cfg.vocab_size, size=rs.randint(8, 24))
+        slot = eng.add_request(prompt.astype(np.int32), args.max_new)
+        slots.append((slot, prompt))
+        print(f"request {i}: prompt_len={len(prompt)} -> slot {slot}")
+
+    steps = 0
+    while eng.live.any():
+        eng.step()
+        steps += 1
+    for slot, prompt in slots:
+        print(f"slot {slot}: generated {eng.outputs[slot]}")
+    print(f"{steps} batched decode steps")
+
+    st = cache_stats(get_config(args.arch), 32768)   # full-size accounting
+    print(f"\n{args.arch} @32k cache: dense {st.dense_bytes / 2**20:.0f} MiB, "
+          f"SFA {st.sfa_bytes / 2**20:.0f} MiB  (saving {st.saving:.1%} — "
+          f"paper Fig. 1b reports ~41%)")
+
+
+if __name__ == "__main__":
+    main()

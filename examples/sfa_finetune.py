@@ -1,0 +1,84 @@
+"""SFA adaptation of a dense-pretrained model (paper §5, Eq. 8).
+
+    PYTHONPATH=src python examples/sfa_finetune.py --pretrain-steps 150 \
+        --finetune-steps 100
+
+1. pretrain a tiny DENSE model;
+2. switch on SFA (same weights) — loss jumps (the distribution shift §5
+   describes);
+3. finetune with and without the Eq. 8 regularizer (MSE pulling SFA head
+   outputs toward stop-grad dense outputs) and report the recovery.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, markov_batch
+from repro.models import init as model_init
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step, make_eval_step
+
+
+def run_steps(cfg, params, opt, steps, dcfg, lr, step0=0):
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=5, total_steps=step0 + steps)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    for s in range(step0, step0 + steps):
+        b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, s).items()}
+        params, opt, m = step(params, opt, b)
+    return params, opt, float(m["ce"])
+
+
+def eval_ce(cfg, params, dcfg):
+    ev = jax.jit(make_eval_step(cfg))
+    ces = []
+    for s in range(20_000, 20_004):
+        b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, s).items()}
+        ces.append(float(ev(params, b)["ce"]))
+    return sum(ces) / len(ces)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pretrain-steps", type=int, default=150)
+    ap.add_argument("--finetune-steps", type=int, default=100)
+    ap.add_argument("--sfa-k", type=int, default=4)
+    ap.add_argument("--lam", type=float, default=1.0)
+    args = ap.parse_args()
+
+    base = dataclasses.replace(get_config("gpt2-small").reduced(),
+                               num_layers=2)
+    dcfg = DataConfig(vocab_size=base.vocab_size, seq_len=128, global_batch=8,
+                      seed=5)
+
+    # 1. dense pretraining
+    params = model_init(jax.random.PRNGKey(0), base)
+    opt = init_opt_state(params)
+    params, opt, _ = run_steps(base, params, opt, args.pretrain_steps, dcfg,
+                               lr=3e-3)
+    dense_ce = eval_ce(base, params, dcfg)
+    print(f"dense-pretrained CE: {dense_ce:.4f}")
+
+    # 2. flip on SFA: distribution shift
+    sfa_cfg = dataclasses.replace(
+        base, attention=dataclasses.replace(base.attention, sfa_k=args.sfa_k))
+    shift_ce = eval_ce(sfa_cfg, params, dcfg)
+    print(f"same weights + SFA(k={args.sfa_k}) CE: {shift_ce:.4f} "
+          f"(shift +{shift_ce - dense_ce:.4f})")
+
+    # 3. finetune, with vs without the Eq. 8 regularizer
+    for lam in (0.0, args.lam):
+        cfgf = dataclasses.replace(sfa_cfg, sfa_distill=lam)
+        p2, o2, _ = run_steps(cfgf, params, init_opt_state(params),
+                              args.finetune_steps, dcfg, lr=1e-3,
+                              step0=args.pretrain_steps)
+        ce = eval_ce(sfa_cfg, p2, dcfg)
+        tag = f"λ={lam}" if lam else "no regularizer"
+        print(f"finetuned ({tag}): CE {ce:.4f} "
+              f"(recovered {shift_ce - ce:.4f} of {shift_ce - dense_ce:.4f})")
+
+
+if __name__ == "__main__":
+    main()

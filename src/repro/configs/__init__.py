@@ -1,0 +1,60 @@
+"""Arch registry: ``get_config(name)`` / ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    AttentionConfig, FrontendConfig, LM_SHAPES, MLAConfig, MoEConfig,
+    ModelConfig, RWKVConfig, SSMConfig, ShapeConfig, shape_by_name,
+    skip_reason,
+)
+from repro.configs import paper_models
+
+_ARCH_MODULES = {
+    "gemma3-4b": "gemma3_4b",
+    "llama3.2-3b": "llama3_2_3b",
+    "llama3-8b": "llama3_8b",
+    "deepseek-7b": "deepseek_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "paligemma-3b": "paligemma_3b",
+    "rwkv6-3b": "rwkv6_3b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+ASSIGNED_ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve an arch id (assigned pool or paper models) to its config."""
+    if name in _ARCH_MODULES:
+        import importlib
+        mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+        return mod.CONFIG
+    if name.startswith("gpt2-"):
+        parts = name.split("-")          # gpt2-small[-sfa8|-short2]
+        size = parts[1]
+        if len(parts) == 2:
+            return paper_models.gpt2(size)
+        if parts[2].startswith("sfa"):
+            return paper_models.gpt2(size, sfa_k=int(parts[2][3:]))
+        if parts[2].startswith("short"):
+            return paper_models.short_embedding(paper_models.gpt2(size),
+                                                int(parts[2][5:]))
+    if name.startswith("qwen3-0.6b"):
+        suffix = name[len("qwen3-0.6b"):]
+        if not suffix:
+            return paper_models.qwen3_06b()
+        if suffix.startswith("-sfa"):
+            return paper_models.qwen3_06b(sfa_k=int(suffix[4:]))
+        if suffix.startswith("-short"):
+            return paper_models.short_embedding(paper_models.qwen3_06b(),
+                                                int(suffix[6:]))
+    raise KeyError(f"unknown arch: {name!r}; assigned: {ASSIGNED_ARCHS}")
+
+
+__all__ = [
+    "AttentionConfig", "FrontendConfig", "LM_SHAPES", "MLAConfig",
+    "MoEConfig", "ModelConfig", "RWKVConfig", "SSMConfig", "ShapeConfig",
+    "ASSIGNED_ARCHS", "get_config", "shape_by_name", "skip_reason",
+    "paper_models",
+]

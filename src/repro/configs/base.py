@@ -1,0 +1,195 @@
+"""Config system: frozen dataclasses describing every architecture.
+
+Every assigned arch is a ``ModelConfig`` built by a module in this package and
+registered in ``repro.configs.registry``. ``reduced()`` derives the smoke-test
+config (tiny depth/width/vocab, same family/block structure) — full configs
+are only ever lowered abstractly via the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention dims."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536          # 0 = no query compression
+    nope_head_dim: int = 128
+    rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    sfa_k: Optional[int] = None      # None = dense; else paper's Top-k budget
+    window: Optional[int] = None     # sliding-window size (local layers)
+    local_global_pattern: Optional[int] = None  # gemma3: N local then 1 global
+    mla: Optional[MLAConfig] = None
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    causal: bool = True
+    qk_norm: bool = False            # qwen3/gemma3-style per-head RMSNorm
+    impl: str = "xla"                # "xla" | "pallas"
+    # SFA-on-RoPE handling (paper A.1): keep a few leading dims dense so
+    # position info survives sparsification; 0 = sparsify everything.
+    sfa_rope_protect: int = 0
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_dim: int                  # per-expert FFN hidden
+    num_shared: int = 0
+    every: int = 1                   # MoE replaces MLP every Nth layer
+    first_dense: int = 0             # leading dense layers (deepseek-style)
+    capacity_factor: float = 1.25    # GShard capacity (tokens may drop above)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 dims (jamba)."""
+    state_dim: int = 16
+    conv_dim: int = 4
+    expand: int = 2
+    dt_rank: int = 0                 # 0 -> ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV-6 'Finch' dims."""
+    head_dim: int = 64
+    decay_lora: int = 64             # data-dependent decay LoRA rank
+    gate_lora: int = 64
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Modality stub: precomputed embeddings in, per assignment."""
+    kind: str                        # "patch" (vlm) | "frame" (audio)
+    input_dim: int                   # raw embedding dim provided by stub
+    prefix_len: int                  # tokens contributed to the sequence
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|hybrid|vlm|ssm|audio
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig]
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    # hybrid layout: index of the attention layer inside each super-block of
+    # ``hybrid_period`` layers (jamba: period 8, attn at 4). None = all-attn.
+    hybrid_period: Optional[int] = None
+    hybrid_attn_index: Optional[int] = None
+    norm: str = "rmsnorm"            # rmsnorm|layernorm
+    act: str = "silu"                # silu|gelu
+    glu: bool = True                 # gated MLP (SwiGLU/GeGLU)
+    tie_embeddings: bool = True
+    causal: bool = True              # False: encoder-only (hubert)
+    pos_embedding: str = "rope"      # rope|learned|none
+    max_seq_len: int = 131072
+    dtype: str = "bfloat16"
+    remat: bool = True               # activation checkpointing per block
+    # loss chunking (vocab-parallel CE): tokens per chunk
+    loss_chunk: int = 512
+    # paper Eq. 8: λ for the SFA->dense attention-output MSE regularizer
+    # used when adapting dense-pretrained weights (examples/sfa_finetune.py)
+    sfa_distill: float = 0.0
+
+    @property
+    def param_dtype(self):
+        return "float32"
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        att = self.attention
+        if att is not None:
+            att = replace(
+                att,
+                num_heads=min(att.num_heads, 4),
+                num_kv_heads=min(att.num_kv_heads, min(att.num_heads, 4)),
+                head_dim=min(att.head_dim, 32),
+                window=min(att.window, 16) if att.window else None,
+                sfa_k=min(att.sfa_k, 4) if att.sfa_k else None,
+                mla=MLAConfig(kv_lora_rank=16, q_lora_rank=24,
+                              nope_head_dim=16, rope_head_dim=8,
+                              v_head_dim=16) if att.mla else None,
+            )
+        moe = self.moe
+        if moe is not None:
+            moe = replace(moe, num_experts=min(moe.num_experts, 4),
+                          top_k=min(moe.top_k, 2), expert_dim=32)
+        ssm = self.ssm
+        if ssm is not None:
+            ssm = replace(ssm, state_dim=4, conv_dim=4, expand=2)
+        rwkv = self.rwkv
+        if rwkv is not None:
+            rwkv = replace(rwkv, head_dim=16, decay_lora=8, gate_lora=8)
+        fe = self.frontend
+        if fe is not None:
+            fe = replace(fe, input_dim=16, prefix_len=4)
+        period = self.hybrid_period
+        layers = (2 * period) if period else 2
+        return replace(
+            self, name=self.name + "-smoke",
+            num_layers=layers, d_model=64,
+            d_ff=128, vocab_size=256, attention=att, moe=moe, ssm=ssm,
+            rwkv=rwkv, frontend=fe, max_seq_len=128, remat=False,
+            loss_chunk=64,
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell of the assignment."""
+    name: str                        # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+LM_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def skip_reason(model: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """Assignment skip rules (DESIGN.md §5). None = run the cell."""
+    if not model.causal and shape.kind == "decode":
+        return "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            model.family in ("ssm", "hybrid")
+            or (model.attention is not None
+                and model.attention.local_global_pattern is not None)
+        )
+        if not sub_quadratic:
+            return "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return None
+
+
+def to_dict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

@@ -1,0 +1,15 @@
+"""Core: the paper's contribution — Sparse Feature Attention (SFA)."""
+from repro.core.sparse import (
+    SparseCode, sparsify, densify, topk_mask, topk_st, intersect_score,
+    to_feature_major, memory_ratio,
+)
+from repro.core.attention import (
+    dense_attention_ref, chunked_attention, sfa_attention, decode_attention,
+)
+
+__all__ = [
+    "SparseCode", "sparsify", "densify", "topk_mask", "topk_st",
+    "intersect_score", "to_feature_major", "memory_ratio",
+    "dense_attention_ref", "chunked_attention", "sfa_attention",
+    "decode_attention",
+]

@@ -1,0 +1,150 @@
+"""Sparse feature codes — the paper's core data structure, TPU-adapted.
+
+The paper stores Topk(Q)/Topk(K) as ragged CSR/CSC_feat. On TPU every tensor
+must be rectangular and statically shaped, so we use the fixed-k token-major
+form: ``values (..., k)`` + ``indices (..., k)`` (int32 in compute; the at-rest
+KV-cache packs indices to int16/int8 — see repro/serve/kv_cache.py — which is
+what realizes the paper's Appendix-J memory ratio 2d/(3k+4)).
+
+All functions are pure and jit/vmap/pjit-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparseCode(NamedTuple):
+    """Fixed-k sparse rows of a (..., d) tensor.
+
+    values:  (..., k)  original entries at the top-k |.| coordinates
+    indices: (..., k)  int32 coordinate ids, ascending per row (deterministic)
+    dim:     d, the dense feature dimension (static python int)
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    dim: int
+
+    @property
+    def k(self) -> int:
+        return self.values.shape[-1]
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Boolean mask selecting the k largest-|x| coords per row (Eq. 4).
+
+    Implemented as an exact 31-step bisection on IEEE-754 bit patterns
+    (elementwise compares + last-dim reductions only) rather than
+    ``jax.lax.top_k``: XLA SPMD partitions TopK/sort by *replicating* the
+    operand across the batch mesh axes (measured: 2×338 GB/step of
+    involuntary all-gathers on a 3B model at 4k — EXPERIMENTS.md §Perf i1),
+    while this formulation shards on every leading dim. Tie-break matches
+    lax.top_k (lowest index wins); equivalence is asserted in tests.
+    """
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones_like(x, dtype=bool)
+    ax = jnp.abs(x.astype(jnp.float32))
+    axb = jax.lax.bitcast_convert_type(ax, jnp.int32)   # >=0: order-isomorphic
+    lo = jnp.zeros(x.shape[:-1] + (1,), jnp.int32)
+    hi = jnp.full(x.shape[:-1] + (1,), jnp.int32(0x7F800001))
+    for _ in range(32):
+        mid = lo + (hi - lo) // 2
+        cnt = jnp.sum((axb >= mid).astype(jnp.int32), axis=-1, keepdims=True)
+        take_lo = cnt >= k
+        lo = jnp.where(take_lo, mid, lo)
+        hi = jnp.where(take_lo, hi, mid)
+    sel_hi = axb > lo                                    # strictly above kth
+    sel_tie = axb == lo
+    n_hi = jnp.sum(sel_hi.astype(jnp.int32), axis=-1, keepdims=True)
+    rank_tie = jnp.cumsum(sel_tie.astype(jnp.int32), axis=-1)
+    return sel_hi | (sel_tie & (rank_tie <= (k - n_hi)))
+
+
+def put_along_last(dst: jax.Array, idx: jax.Array, src: jax.Array) -> jax.Array:
+    """dst[..., idx] = src along the last axis (one-hot scatter, TPU-friendly)."""
+    d = dst.shape[-1]
+    onehot = jax.nn.one_hot(idx, d, dtype=src.dtype)  # (..., k, d)
+    upd = jnp.einsum("...k,...kd->...d", src, onehot)
+    keep = 1 - jnp.clip(onehot.sum(-2), 0, 1)
+    return dst * keep.astype(dst.dtype) + upd.astype(dst.dtype)
+
+
+def sparsify(x: jax.Array, k: int) -> SparseCode:
+    """Row-wise Top-k by magnitude, keeping original values (paper Eq. 3-4).
+
+    Compaction by iterative first-set-bit extraction over the bisection mask
+    (k × argmax/gather, no sort) — indices come out ascending, and like
+    ``topk_mask`` the whole thing shards on every leading dim (lax.top_k +
+    jnp.sort would replicate — see topk_mask docstring).
+    """
+    d = x.shape[-1]
+    k = min(k, d)
+    mask = topk_mask(x, k)
+    rem = mask
+    iota = jnp.arange(d, dtype=jnp.int32)
+    vals, idxs = [], []
+    for _ in range(k):
+        i_t = jnp.argmax(rem, axis=-1).astype(jnp.int32)     # first set bit
+        v_t = jnp.take_along_axis(x, i_t[..., None], axis=-1)[..., 0]
+        idxs.append(i_t)
+        vals.append(v_t)
+        rem = rem & (iota != i_t[..., None])
+    return SparseCode(values=jnp.stack(vals, -1), indices=jnp.stack(idxs, -1),
+                      dim=d)
+
+
+def densify(code: SparseCode) -> jax.Array:
+    """Scatter a SparseCode back to its dense (..., d) form.
+
+    Implemented as the iota-compare one-hot contraction — the TPU scatter
+    idiom used inside the Pallas kernels too.
+    """
+    onehot = jax.nn.one_hot(code.indices, code.dim, dtype=code.values.dtype)
+    return jnp.einsum("...k,...kd->...d", code.values, onehot)
+
+
+def topk_st(x: jax.Array, k: int) -> jax.Array:
+    """Straight-through Top-k (paper Eq. 6): forward = Topk_k(x); backward
+    passes gradients only through the selected coordinates.
+
+    Since the support is piecewise-constant in x, multiplying by a
+    stop-gradient mask realizes exactly the paper's estimator.
+    """
+    mask = jax.lax.stop_gradient(topk_mask(x, k)).astype(x.dtype)
+    return x * mask
+
+
+def to_feature_major(code: SparseCode, n_tokens: int | None = None) -> jax.Array:
+    """Beyond-paper decode layout: dense feature-major (d, n) matrix.
+
+    A k-sparse *query* then needs only its k feature rows -> O(nk) contiguous
+    HBM reads and an MXU k-contraction (see DESIGN.md §2). Trades cache
+    capacity for bandwidth+FLOPs.
+    """
+    dense = densify(code)  # (..., n, d)
+    return jnp.swapaxes(dense, -1, -2)  # (..., d, n)
+
+
+def intersect_score(q: SparseCode, kc: SparseCode, scale: float) -> jax.Array:
+    """Reference score via explicit support intersection (paper Eq. 5).
+
+    s_ij = scale * sum_{u in S_i ∩ S_j} q_iu k_ju.
+    O(n^2 k^2) elementwise — used only as a small-shape oracle in tests to
+    prove the densified matmul path is mathematically identical.
+    """
+    # (..., nq, 1, kq, 1) vs (..., 1, nk, 1, kk)
+    qi = q.indices[..., :, None, :, None]
+    ki = kc.indices[..., None, :, None, :]
+    match = (qi == ki).astype(q.values.dtype)
+    qv = q.values[..., :, None, :, None]
+    kv = kc.values[..., None, :, None, :]
+    return (qv * kv * match).sum((-1, -2)) * scale
+
+
+def memory_ratio(d: int, k: int, s_val: int = 2, s_idx: int = 1, s_ptr: int = 4) -> float:
+    """Paper Appendix J, Eq. 15-16: dense/CSR memory ratio ~ 2d/(3k+4)."""
+    return (d * s_val) / (k * (s_val + s_idx) + s_ptr)

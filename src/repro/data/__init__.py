@@ -1,0 +1,5 @@
+from repro.data.pipeline import DataConfig, batches, markov_batch, copy_batch
+from repro.data.niah import niah_batch, niah_accuracy
+
+__all__ = ["DataConfig", "batches", "markov_batch", "copy_batch",
+           "niah_batch", "niah_accuracy"]

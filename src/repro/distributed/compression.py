@@ -1,0 +1,53 @@
+"""Gradient compression for cross-pod all-reduce: top-k + error feedback.
+
+The paper's thesis — magnitude top-k preserves the information that matters —
+applied to the *communication* substrate: before the (slow, cross-pod ICI/DCN)
+gradient all-reduce, each gradient tensor is sparsified to its top-k fraction
+with local error feedback (Stich et al. semantics: the residual is carried to
+the next step, so compression is unbiased over time).
+
+Usage inside the train step (DP mean happens via pjit on the compressed
+values — zeros cost no *information*, and with the hierarchical mesh layout
+XLA reduces them in-pod before the cross-pod hop; byte-exact sparse
+collectives would need a custom transfer layer, which we note as the
+deploy-time extension):
+
+    comp, new_err = compress_tree(grads, err, fraction=0.05)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse import topk_mask
+
+
+def compress_leaf(g, err, fraction: float):
+    """Top-|fraction·size| magnitude sparsification with error feedback."""
+    acc = g.astype(jnp.float32) + (err if err is not None else 0.0)
+    flat = acc.reshape(-1)
+    k = max(1, int(flat.shape[0] * fraction))
+    mask = topk_mask(flat[None, :], k)[0]
+    comp = jnp.where(mask, flat, 0.0).reshape(g.shape)
+    new_err = (flat * (~mask)).reshape(g.shape)
+    return comp.astype(g.dtype), new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_tree(grads, err_state, fraction: float = 0.05,
+                  min_size: int = 4096):
+    """Compress every leaf with >= min_size elements; small leaves pass
+    through (their bytes are negligible and biasing them is pointless)."""
+    def one(g, e):
+        if g.size < min_size:
+            return g, e
+        return compress_leaf(g, e, fraction)
+    pairs = jax.tree.map(one, grads, err_state)
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_err

@@ -1,0 +1,142 @@
+"""FlashSFA-TPU: IO-sparse, compute-dense tiled attention (prefill/training).
+
+TPU adaptation of the paper's Algorithm 1 (Appendix C). The GPU kernel walks
+CSR(Q)×CSC_feat(K) posting-list intersections with scatter-adds; the MXU has
+no sparse path, so here each sparse tile is *densified in VMEM* with the
+iota-compare one-hot idiom (k VPU passes over a (block, d) tile) and scores
+come from one dense MXU matmul. HBM traffic for Q and K is O(nk) — the sparse
+values+indices are all that is read — while compute runs at full MXU
+throughput. Online softmax / causal masking / V streaming are identical to
+FlashAttention (per-q-block running max, denominator and accumulator held in
+VMEM scratch across the sequential kv-block grid axis).
+
+See DESIGN.md §2 for the napkin math on why intersection-on-VPU would lose to
+densify-and-MXU at the paper's (d, k) operating points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _densify_block(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    """(b, k) sparse rows -> (b, d) dense, via k iota-compare VPU passes."""
+    b, k = vals.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, d), 1)
+    out = jnp.zeros((b, d), jnp.float32)
+    for t in range(k):
+        hit = (iota == idx[:, t][:, None]).astype(jnp.float32)
+        out = out + hit * vals[:, t][:, None].astype(jnp.float32)
+    return out
+
+
+def _flash_sfa_kernel(qv_ref, qi_ref, kv_ref, ki_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, d: int, scale: float,
+                      causal: bool, block_q: int, block_k: int, nk_real: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    nkb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qb * block_q
+    k_start = kb * block_k
+    # A kv block is live unless it is entirely in the causal future.
+    live = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _compute():
+        qd = _densify_block(qv_ref[0], qi_ref[0], d)          # (bq, d) f32
+        kd = _densify_block(kv_ref[0], ki_ref[0], d)          # (bk, d) f32
+        s = jax.lax.dot_general(
+            qd, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        ok = cols < nk_real  # mask keys beyond the real sequence (padding)
+        if causal:
+            ok &= cols <= rows
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[:, 0]                                   # (bq,)
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        vb = v_ref[0].astype(jnp.float32)                      # (bk, dv)
+        pv = jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d", "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_sfa(q_vals, q_idx, k_vals, k_idx, v, *, d: int, causal: bool = True,
+              scale: float | None = None, block_q: int = 128,
+              block_k: int = 128, interpret: bool = True):
+    """FlashSFA forward. Codes: (bh, n, k); v: (bh, n, dv) -> (bh, n, dv).
+
+    Exactly softmax(densify(Q̃)·densify(K̃)ᵀ·scale + causal)·V, computed in
+    (block_q × block_k) tiles with online softmax; no (n, n) materialization.
+    """
+    bh, nq, kq = q_vals.shape
+    nk = k_vals.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    pad_q = (-nq) % block_q
+    pad_k = (-nk) % block_k
+    if pad_q:
+        q_vals = jnp.pad(q_vals, ((0, 0), (0, pad_q), (0, 0)))
+        q_idx = jnp.pad(q_idx, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # Padded keys are masked in-kernel via cols < nk_real.
+        k_vals = jnp.pad(k_vals, ((0, 0), (0, pad_k), (0, 0)))
+        k_idx = jnp.pad(k_idx, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    grid = (bh, (nq + pad_q) // block_q, (nk + pad_k) // block_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_sfa_kernel, d=d, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, nk_real=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, kq), lambda b, q, k: (b, q, 0)),
+            pl.BlockSpec((1, block_q, kq), lambda b, q, k: (b, q, 0)),
+            pl.BlockSpec((1, block_k, k_vals.shape[-1]), lambda b, q, k: (b, k, 0)),
+            pl.BlockSpec((1, block_k, k_idx.shape[-1]), lambda b, q, k: (b, k, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda b, q, k: (b, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda b, q, k: (b, q, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq + pad_q, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_vals, q_idx, k_vals, k_idx, v)
+    return out[:, :nq]

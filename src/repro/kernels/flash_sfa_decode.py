@@ -1,0 +1,234 @@
+"""FlashSFA decode kernels — the memory-bound case the paper targets.
+
+Two KV-cache layouts (DESIGN.md §2):
+
+1. ``flash_sfa_decode`` (paper-faithful, token-major): K̃ cache stored as
+   ``(n, k)`` values + indices. HBM traffic per step: ``n·k·(val+idx bytes)``
+   for K instead of ``n·d`` dense — the paper's O(nk) claim, realized on TPU
+   by densifying each cache tile in VMEM (one-hot) and a dense MXU matvec.
+   KV-cache memory shrinks by ≈ 2d/(3k+4) on the K half (Appendix J).
+
+2. ``flash_sfa_decode_fm`` (beyond-paper, feature-major): K cache stored
+   dense ``(d, n)`` feature-major; the *query's* sparse support selects which
+   k of the d feature rows to stream. Scalar-prefetched q-indices drive the
+   BlockSpec index map, so only k rows ever leave HBM: O(nk) traffic AND an
+   O(nk) MXU contraction (a real k/d FLOP cut with zero scatter). Trades
+   cache capacity for bandwidth+FLOPs — benchmarked against layout 1 in
+   EXPERIMENTS.md §Perf.
+
+Both kernels mask by a runtime ``length`` (scalar-prefetched), support
+pre-allocated over-length caches, and use online softmax across sequential
+cache tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _densify_block(vals, idx, d):
+    b, k = vals.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, d), 1)
+    out = jnp.zeros((b, d), jnp.float32)
+    for t in range(k):
+        hit = (iota == idx[:, t][:, None]).astype(jnp.float32)
+        out = out + hit * vals[:, t][:, None].astype(jnp.float32)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Layout 1: token-major sparse K cache (paper-faithful)
+# --------------------------------------------------------------------------
+
+def _decode_kernel(len_ref, q_ref, kv_ref, ki_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, d: int, scale: float,
+                   block_n: int):
+    b = pl.program_id(0)
+    nb = pl.program_id(1)
+    nnb = pl.num_programs(1)
+    length = len_ref[b]
+
+    @pl.when(nb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(nb * block_n < length)
+    def _compute():
+        kd = _densify_block(kv_ref[0], ki_ref[0], d)            # (bn, d)
+        q = q_ref[...].astype(jnp.float32)                      # (1, d)
+        s = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale          # (1, bn)
+        pos = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)                                   # (1, bn)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[0, 0] * corr + p.sum()
+        vb = v_ref[0].astype(jnp.float32)                        # (bn, dv)
+        pv = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (1, dv)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.full_like(m_ref, m_new)
+        l_ref[...] = jnp.full_like(l_ref, l_new)
+
+    @pl.when(nb == nnb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "scale", "block_n", "interpret"))
+def flash_sfa_decode(q, k_vals, k_idx, v, lengths, *, d: int,
+                     scale: float | None = None, block_n: int = 128,
+                     interpret: bool = True):
+    """Token-major sparse-cache decode.
+
+    q: (bh, d) dense query (one token); k_vals/k_idx: (bh, n_max, k);
+    v: (bh, n_max, dv); lengths: (bh,) int32. -> (bh, dv)
+    """
+    bh, nmax, kk = k_vals.shape
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    pad = (-nmax) % block_n
+    if pad:
+        k_vals = jnp.pad(k_vals, ((0, 0), (0, pad), (0, 0)))
+        k_idx = jnp.pad(k_idx, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    grid = (bh, (nmax + pad) // block_n)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, d=d, scale=scale, block_n=block_n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda b, n, L: (b, 0)),
+                pl.BlockSpec((1, block_n, kk), lambda b, n, L: (b, n, 0)),
+                pl.BlockSpec((1, block_n, kk), lambda b, n, L: (b, n, 0)),
+                pl.BlockSpec((1, block_n, dv), lambda b, n, L: (b, n, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dv), lambda b, n, L: (b, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, dv), v.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), q, k_vals, k_idx, v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Layout 2: feature-major dense K cache + sparse query (beyond-paper)
+# --------------------------------------------------------------------------
+
+def _decode_fm_kernel(qi_ref, len_ref, qv_ref, kf_ref, v_ref, o_ref,
+                      s_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                      block_n: int, kq: int):
+    b = pl.program_id(0)
+    nb = pl.program_id(1)
+    t = pl.program_id(2)
+    nnb = pl.num_programs(1)
+    length = len_ref[b]
+
+    @pl.when((nb == 0) & (t == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t == 0)
+    def _clear_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    @pl.when(nb * block_n < length)
+    def _accumulate():
+        # kf_ref block is the single feature row qi[b, t] of the cache:
+        # shape (1, 1, block_n). Accumulate qv[t] * K_feat[row, tile].
+        s_ref[...] = s_ref[...] + qv_ref[0, t].astype(jnp.float32) * \
+            kf_ref[0, 0].astype(jnp.float32)[None, :]
+
+    @pl.when((t == kq - 1) & (nb * block_n < length))
+    def _softmax_update():
+        s = s_ref[...] * scale                                   # (1, bn)
+        pos = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[0, 0] * corr + p.sum()
+        vb = v_ref[0].astype(jnp.float32)                        # (bn, dv)
+        pv = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.full_like(m_ref, m_new)
+        l_ref[...] = jnp.full_like(l_ref, l_new)
+
+    @pl.when((nb == nnb - 1) & (t == kq - 1))
+    def _finalize():
+        o_ref[...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
+def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
+                        scale: float | None = None, block_n: int = 128,
+                        interpret: bool = True):
+    """Feature-major decode: sparse query gathers k feature rows of the cache.
+
+    q_vals/q_idx: (bh, k); k_feat: (bh, d, n_max); v: (bh, n_max, dv);
+    lengths: (bh,). -> (bh, dv). Only the k addressed rows of k_feat are
+    fetched from HBM (index map driven by scalar-prefetched q_idx).
+    """
+    bh, kq = q_vals.shape
+    d, nmax = k_feat.shape[1], k_feat.shape[2]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    pad = (-nmax) % block_n
+    if pad:
+        k_feat = jnp.pad(k_feat, ((0, 0), (0, 0), (0, pad)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    grid = (bh, (nmax + pad) // block_n, kq)
+    out = pl.pallas_call(
+        functools.partial(_decode_fm_kernel, scale=scale, block_n=block_n,
+                          kq=kq),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, kq), lambda b, n, t, qi, L: (b, 0)),
+                # the magic: fetch exactly feature row qi[b, t]
+                pl.BlockSpec((1, 1, block_n),
+                             lambda b, n, t, qi, L: (b, qi[b, t], n)),
+                pl.BlockSpec((1, block_n, dv), lambda b, n, t, qi, L: (b, n, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dv), lambda b, n, t, qi, L: (b, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, block_n), jnp.float32),
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, dv), v.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(q_idx, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q_vals, k_feat, v)
+    return out

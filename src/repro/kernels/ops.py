@@ -1,0 +1,91 @@
+"""Jitted public wrappers around the Pallas kernels + backend dispatch.
+
+``sfa_attention_op`` is the full fused pipeline (rtopk sparsify -> FlashSFA)
+on (batch, seq, heads, head_dim) activations, matching the signature of
+``repro.core.attention.sfa_attention``. ``impl`` selects:
+
+  * ``"xla"``     — pure-JAX chunked online-softmax (always available; what
+                    the pjit/dry-run path lowers; differentiable).
+  * ``"pallas"``  — Pallas kernels, ``interpret=True`` on CPU (correctness)
+                    or compiled on a real TPU. Forward-only: the backward
+                    pass falls back to XLA via ``jax.custom_vjp`` so training
+                    with impl='pallas' still works end-to-end.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as att
+from repro.core.sparse import topk_st
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_sfa import flash_sfa
+from repro.kernels.rtopk import rtopk
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _fold_heads(x):
+    b, n, h, d = x.shape
+    return jnp.einsum("bnhd->bhnd", x).reshape(b * h, n, d)
+
+
+def _unfold_heads(x, b, h):
+    bh, n, d = x.shape
+    return jnp.einsum("bhnd->bnhd", x.reshape(b, h, n, d))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _sfa_pallas(q, k, v, sfa_k, causal, scale):
+    b, n, h, d = q.shape
+    qf, kf, vf = _fold_heads(q), _fold_heads(k), _fold_heads(v)
+    qv, qi = rtopk(qf, sfa_k, interpret=not _ON_TPU)
+    kv_, ki = rtopk(kf, sfa_k, interpret=not _ON_TPU)
+    out = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
+                    interpret=not _ON_TPU)
+    return _unfold_heads(out, b, h)
+
+
+def _sfa_xla(q, k, v, sfa_k, causal, scale):
+    return att.sfa_attention(q, k, v, sfa_k=sfa_k, causal=causal, scale=scale)
+
+
+def _sfa_fwd(q, k, v, sfa_k, causal, scale):
+    return _sfa_pallas(q, k, v, sfa_k, causal, scale), (q, k, v)
+
+
+def _sfa_bwd(sfa_k, causal, scale, res, g):
+    # Straight-through backward via the XLA path (paper Eq. 6 semantics).
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _sfa_xla(q, k, v, sfa_k, causal, scale),
+                     q, k, v)
+    return vjp(g)
+
+
+_sfa_pallas.defvjp(_sfa_fwd, _sfa_bwd)
+
+
+def sfa_attention_op(q, k, v, *, sfa_k: int, causal: bool = True,
+                     scale: float | None = None, impl: str = "xla"):
+    """SFA attention on (b, n, h, d) activations. See module docstring."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    if impl == "pallas":
+        return _sfa_pallas(q, k, v, sfa_k, causal, scale)
+    return _sfa_xla(q, k, v, sfa_k, causal, scale)
+
+
+def dense_attention_op(q, k, v, *, causal: bool = True,
+                       scale: float | None = None, impl: str = "xla"):
+    """Dense attention on (b, n, h, d); pallas impl is forward-only."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    if impl == "pallas":
+        b, n, h, _ = q.shape
+        out = flash_attention(_fold_heads(q), _fold_heads(k), _fold_heads(v),
+                              causal=causal, scale=scale,
+                              interpret=not _ON_TPU)
+        return _unfold_heads(out, b, h)
+    return att.chunked_attention(q, k, v, causal=causal, scale=scale)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<kernel>_ref`` is the ground truth that ``tests/test_kernels_*.py``
+sweeps shapes/dtypes against (kernels run with ``interpret=True`` on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rtopk_ref(x: jax.Array, k: int):
+    """Row-wise top-k by |x|; returns (values, indices) with indices ascending
+    per row — identical contract to repro.core.sparse.sparsify."""
+    _, idx = jax.lax.top_k(jnp.abs(x).astype(jnp.float32), k)
+    idx = jnp.sort(idx, axis=-1)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def _densify(vals, idx, d):
+    onehot = jax.nn.one_hot(idx, d, dtype=vals.dtype)
+    return jnp.einsum("...k,...kd->...d", vals, onehot)
+
+
+def flash_sfa_ref(q_vals, q_idx, k_vals, k_idx, v, *, d: int, causal: bool = True,
+                  scale: float | None = None):
+    """FlashSFA prefill oracle.
+
+    Inputs are already-sparsified codes, shapes (bh, n, k); v is (bh, n, dv).
+    Output (bh, n, dv) = softmax(densify(Q̃) densify(K̃)ᵀ · scale + mask) V.
+    """
+    scale = scale if scale is not None else d ** -0.5
+    qd = _densify(q_vals.astype(jnp.float32), q_idx, d)
+    kd = _densify(k_vals.astype(jnp.float32), k_idx, d)
+    s = jnp.einsum("bqd,bkd->bqk", qd, kd) * scale
+    if causal:
+        n, m = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(m)[None, :] <= jnp.arange(n)[:, None]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+def flash_sfa_decode_ref(q, k_vals, k_idx, v, length, *, d: int,
+                         scale: float | None = None):
+    """Decode oracle: dense single query vs sparse K cache + dense V cache.
+
+    q: (bh, d); k_vals/k_idx: (bh, n_max, k); v: (bh, n_max, dv);
+    length: int32 () or (bh,) — valid prefix of the cache.
+    """
+    scale = scale if scale is not None else d ** -0.5
+    kd = _densify(k_vals.astype(jnp.float32), k_idx, d)  # (bh, n, d)
+    s = jnp.einsum("bd,bnd->bn", q.astype(jnp.float32), kd) * scale
+    n = k_vals.shape[1]
+    length = jnp.asarray(length)
+    valid = jnp.arange(n)[None, :] < (length[:, None] if length.ndim else length)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bn,bnd->bd", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+def flash_sfa_decode_featmajor_ref(q_vals, q_idx, k_feat, v, length, *,
+                                   scale: float | None = None):
+    """Feature-major decode oracle (beyond-paper variant, DESIGN.md §2).
+
+    q_vals/q_idx: (bh, k) sparse query; k_feat: (bh, d, n_max) feature-major
+    dense K; v: (bh, n_max, dv); length as above.
+    """
+    d = k_feat.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    qd = _densify(q_vals.astype(jnp.float32), q_idx, d)  # (bh, d)
+    s = jnp.einsum("bd,bdn->bn", qd, k_feat.astype(jnp.float32)) * scale
+    n = k_feat.shape[2]
+    length = jnp.asarray(length)
+    valid = jnp.arange(n)[None, :] < (length[:, None] if length.ndim else length)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bn,bnd->bd", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Dense FlashAttention oracle. q/k/v: (bh, n, d)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        n, m = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(m)[None, :] <= jnp.arange(n)[:, None]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(v.dtype)

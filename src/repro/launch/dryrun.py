@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax-importing import: jax locks device count on init.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract memory/cost/roofline evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --multi-pod both --out results/dryrun.json
+
+``--arch all --shape all`` sweeps the full 40-cell matrix (skips recorded
+with reasons). Each cell:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+        compiled = lowered.compile()
+        compiled.memory_analysis()      # proves it fits
+        compiled.cost_analysis()        # FLOPs/bytes for §Roofline
+        parse_collectives(compiled.as_text())
+"""  # noqa: E501
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, LM_SHAPES, get_config, skip_reason
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import axis_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.models import decode_step, prefill
+from repro.optim import OptimizerConfig
+from repro.train.train_step import make_train_step
+from repro.utils import roofline as R
+from repro.utils import analytic as A
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes", "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _partition_mode(cfg: ModelConfig, shape: ShapeConfig, mesh) -> str:
+    """zero3 (pure DP, fully sharded params) for attention-free training
+    when the batch covers the whole mesh — §Perf i3; TP otherwise."""
+    in_pod = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+    if cfg.family == "ssm" and shape.kind == "train" and \
+            shape.global_batch % in_pod == 0:
+        return "zero3"          # batch over (data, model); pod stays pure-DP
+    return "tp"
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               compile_: bool = True) -> dict:
+    ndev = mesh.devices.size
+    t0 = time.monotonic()
+    mode = _partition_mode(cfg, shape, mesh)
+    if mode == "zero3":
+        # pure DP: batch covers (data, model); no TP anywhere (incl. the
+        # residual 'embed' rule — it would double-book the model axis)
+        rules = {"batch": ("data", "model"), "seq_sp": None, "heads": None,
+                 "mlp": None, "vocab": None, "embed": None}
+    elif shape.kind != "train":
+        # Megatron-SP residual sharding (§Perf i9) only pays where remat
+        # checkpoints exist; prefill/decode have no backward, so the
+        # boundary gathers would be pure cost
+        rules = {"embed": None}
+    else:
+        rules = None
+    with mesh, axis_rules(mesh, rules):
+        batch_ax = tuple(a for a in ("data", "model")
+                         if a in mesh.shape) if mode == "zero3" \
+            else S.batch_axes(mesh)
+        ins = S.input_specs(cfg, shape)
+        if shape.kind == "train":
+            params_s, opt_s = S.abstract_state(cfg)
+            pspec = S.param_specs(params_s, cfg, mesh, mode=mode)
+            p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            o_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                type(opt_s)(step=P(), m=pspec, v=pspec),
+                is_leaf=lambda x: isinstance(x, P))
+            b_shard = jax.tree.map(
+                lambda st: NamedSharding(
+                    mesh, P(batch_ax, *([None] * (len(st.shape) - 1)))), ins)
+            step_fn = make_train_step(cfg, OptimizerConfig())
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_s, opt_s, ins)
+        elif shape.kind == "prefill":
+            params_s, _ = S.abstract_state(cfg)
+            pspec = S.param_specs(params_s, cfg, mesh)
+            p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            b_shard = jax.tree.map(
+                lambda st: NamedSharding(
+                    mesh, P(batch_ax, *([None] * (len(st.shape) - 1)))), ins)
+            jitted = jax.jit(lambda p, b: prefill(p, b, cfg),
+                             in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_s, ins)
+        else:  # decode
+            params_s, _ = S.abstract_state(cfg)
+            pspec = S.param_specs(params_s, cfg, mesh)
+            p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            cspec = S.cache_specs(ins["caches"], cfg, mesh,
+                                  batch=shape.global_batch,
+                                  max_len=shape.seq_len)
+            c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            bspec = P(batch_ax) if shape.global_batch % (
+                ndev // mesh.shape.get("model", 1)) == 0 else P()
+            tok_shard = NamedSharding(mesh, bspec)
+            jitted = jax.jit(
+                lambda p, t, c, l: decode_step(p, t, c, l, cfg),
+                in_shardings=(p_shard, tok_shard, c_shard, tok_shard),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_s, ins["token"], ins["caches"],
+                                   ins["cache_len"])
+        out = {"lower_s": round(time.monotonic() - t0, 1)}
+        if compile_:
+            t1 = time.monotonic()
+            compiled = lowered.compile()
+            out["compile_s"] = round(time.monotonic() - t1, 1)
+            mem = compiled.memory_analysis()
+            out["memory"] = _mem_dict(mem)
+            # raw HLO counters (loop bodies counted once — see utils/analytic)
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            out["cost_analysis"] = {
+                "flops_per_dev": float(ca.get("flops", 0.0)),
+                "bytes_per_dev": float(ca.get("bytes accessed", 0.0))}
+            # loop-aware collective census from the compiled HLO
+            stats = R.parse_collectives(compiled.as_text(), ndev)
+            # analytic flops/bytes (closed form; loop-count exact)
+            fl = A.step_flops(cfg, shape)
+            hb = A.step_hbm_bytes(cfg, shape, ndev)
+            rf = R.Roofline(flops=fl["total_flops"],
+                            hbm_bytes=hb["bytes_per_dev"] * ndev,
+                            wire_bytes=stats.total_wire_bytes,
+                            num_devices=ndev, collectives=stats)
+            out["roofline"] = rf.as_dict()
+            out["roofline"]["model_flops"] = fl["model_flops"]
+            out["roofline"]["useful_ratio"] = fl["useful_ratio"]
+            out["analytic"] = {"flops": fl, "hbm": hb}
+            per_dev = (out["memory"].get("argument_size_in_bytes", 0) +
+                       out["memory"].get("temp_size_in_bytes", 0) +
+                       out["memory"].get("output_size_in_bytes", 0) -
+                       out["memory"].get("alias_size_in_bytes", 0)) / ndev
+            out["bytes_per_device"] = int(per_dev)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             compile_: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = next(s for s in LM_SHAPES if s.name == shape_name)
+    reason = skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rec.update(lower_cell(cfg, shape, mesh, compile_=compile_))
+        rec["status"] = "ok"
+    except Exception as e:                                  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc(limit=20)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"], default="off")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-compile", action="store_true",
+                    help="lower only (fast sanity pass)")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in LM_SHAPES] if args.shape == "all" \
+        else [args.shape]
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                rec = run_cell(arch, shape, mp, compile_=not args.no_compile)
+                status = rec["status"]
+                extra = ""
+                if status == "ok" and "roofline" in rec:
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" tc={r['t_compute_s']:.3e}"
+                             f" tm={r['t_memory_s']:.3e}"
+                             f" tx={r['t_collective_s']:.3e}")
+                elif status == "skipped":
+                    extra = f" ({rec['reason'][:40]}…)"
+                elif status == "error":
+                    extra = f" {rec['error'][:120]}"
+                print(f"[{status:7s}] {arch:22s} {shape:12s} "
+                      f"{rec['mesh']:8s}{extra}", flush=True)
+                results.append(rec)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{len(bad)} errors")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,49 @@
+"""Serving launcher: build a model and answer batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+        --requests 4 --max-new 16
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init as model_init
+from repro.serve import DecodeEngine, EngineConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(params, cfg, EngineConfig(
+        max_slots=max(args.requests, 2), max_len=args.max_len,
+        temperature=args.temperature))
+    rs = np.random.RandomState(0)
+    for i in range(args.requests):
+        prompt = rs.randint(0, cfg.vocab_size,
+                            size=rs.randint(4, 32)).astype(np.int32)
+        eng.add_request(prompt, args.max_new)
+    steps = 0
+    while eng.live.any():
+        eng.step()
+        steps += 1
+    for i in range(args.requests):
+        print(f"slot {i}: {eng.outputs[i]}")
+    print(f"{steps} batched decode steps, "
+          f"{sum(len(o) for o in eng.outputs)} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""Sharding spec derivation + abstract input specs for the dry-run.
+
+``param_specs`` maps the parameter pytree to PartitionSpecs by path rules
+(TP on fused head/ffn/vocab dims, FSDP on the d_model dim over ``data``,
+EP on the expert dim), with automatic divisibility fallback: any proposed
+axis that does not divide the dim is dropped, so the same rules serve every
+arch (e.g. hubert's vocab=504 falls back to replicated).
+
+``input_specs`` produces ShapeDtypeStructs for every (arch × shape) cell —
+weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init as model_init, init_decode_caches
+
+DATA_AXES = ("data",)            # FSDP axes (in-pod; pod stays pure-DP)
+MODEL_AXIS = "model"
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+_COL_KEYS = ("w_q", "w_k", "w_v", "w_g", "w_qkv", "up", "gate", "up_gate",
+             "w_uq_nope", "w_uq_pe", "w_uk", "w_uv", "in_proj", "dt_proj",
+             "w_kpe", "frontend", "shared_up", "shared_gate", "w_r")
+_ROW_KEYS = ("w_o", "down", "out_proj", "x_proj", "shared_down")
+
+
+def _axis_ok(mesh: Mesh, axis, dim_size: int) -> bool:
+    if axis is None:
+        return True
+    sizes = mesh.shape
+    if isinstance(axis, tuple):
+        total = 1
+        for a in sizes:
+            if a in axis:
+                total *= sizes[a]
+        return dim_size % total == 0 and all(a in sizes for a in axis)
+    return axis in sizes and dim_size % sizes[axis] == 0
+
+
+def _clean(mesh: Mesh, spec: P, shape) -> P:
+    out = []
+    for i, ax in enumerate(spec):
+        ax2 = ax
+        if isinstance(ax, tuple):
+            ax2 = tuple(a for a in ax if a in mesh.shape)
+            ax2 = ax2 or None
+        elif ax is not None and ax not in mesh.shape:
+            ax2 = None
+        out.append(ax2 if _axis_ok(mesh, ax2, shape[i]) else None)
+    return P(*out)
+
+
+def _leaf_spec(path: str, leaf, cfg: ModelConfig, stacked: bool) -> P:
+    nd = leaf.ndim
+    lead = (None,) if stacked else ()
+    dims = nd - len(lead)
+    name = path.split("/")[-2] if path.endswith("/w") else path.split("/")[-1]
+
+    if dims == 1:
+        return P(*lead, None)
+    # MoE expert tensors: (E, din, dout) -> EP on E, FSDP on din
+    if name in ("up", "down", "gate") and dims == 3:
+        return P(*lead, MODEL_AXIS, "data", None)
+    if path.endswith("embed/w") or "pos/w" in path:
+        return P(*lead, MODEL_AXIS, "data")           # vocab-TP + FSDP
+    if "lm_head" in path:
+        return P(*lead, "data", MODEL_AXIS)
+    if name in _COL_KEYS and dims == 2:
+        return P(*lead, "data", MODEL_AXIS)           # column parallel + FSDP
+    if name in _ROW_KEYS and dims == 2:
+        return P(*lead, MODEL_AXIS, "data")           # row parallel + FSDP
+    if name == "conv_w":
+        return P(*lead, None, MODEL_AXIS)
+    if name in ("a_log", "u") and dims == 2:
+        return P(*lead, MODEL_AXIS, None)
+    if name in ("dt_bias", "d_skip", "w0") and dims == 1:
+        return P(*lead, MODEL_AXIS)
+    if dims == 2:
+        return P(*lead, "data", None)                 # default: FSDP dim0
+    return P(*lead, *([None] * dims))
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh, *, mode: str = "tp"):
+    """PartitionSpec pytree matching ``params``.
+
+    mode="tp": TP on fused head/ffn/vocab dims + FSDP over data (default).
+    mode="zero3": no tensor parallelism — every matrix fully sharded over
+    (data, model) on its largest divisible dim, gathered at use. The right
+    call for attention-free stacks of square matmuls (rwkv), where TP's
+    activation all-reduces dwarf the param all-gathers it saves
+    (EXPERIMENTS.md §Perf i3); requires batch % (data×model) == 0.
+    """
+    def spec_for(path_parts, leaf):
+        path = "/".join(str(p) for p in path_parts)
+        stacked = "segments" in path
+        if mode == "zero3":
+            lead = (None,) if stacked else ()
+            dims = leaf.ndim - len(lead)
+            if dims >= 2:
+                s = P(*lead, ("data", MODEL_AXIS), *([None] * (dims - 1)))
+            elif dims == 1:
+                s = P(*lead, ("data", MODEL_AXIS))
+            else:
+                s = P(*lead)
+        else:
+            s = _leaf_spec(path, leaf, cfg, stacked)
+        return _clean(mesh, s, leaf.shape)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for kp, leaf in flat:
+        parts = []
+        for entry in kp:
+            if hasattr(entry, "key"):
+                parts.append(entry.key)
+            elif hasattr(entry, "idx"):
+                parts.append(str(entry.idx))
+        specs.append(spec_for(parts, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------------
+# cache / batch / input specs
+# --------------------------------------------------------------------------
+
+def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
+                max_len: int):
+    """Specs for the stacked decode caches.
+
+    Layout per leaf: axis0=layers (replicated), axis1=batch. Priority:
+      1. batch over (pod, data) when divisible;
+      2. KV heads over model when divisible; otherwise the cache *length*
+         axis takes the model axis (flash-decode sequence parallelism);
+      3. when batch itself is too small (long_500k b=1), the length axis
+         additionally takes the data axis;
+      4. MLA latent dim / SSM channel dims shard over model when divisible.
+    """
+    a = cfg.attention
+    batch_ax = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    bsz = 1
+    for ax in batch_ax:
+        bsz *= mesh.shape.get(ax, 1)
+    batch_ok = batch % bsz == 0
+    msize = mesh.shape.get(MODEL_AXIS, 1)
+    heads_ok = a is not None and a.mla is None and \
+        a.num_kv_heads % msize == 0
+    latent = a.mla.kv_lora_rank if (a is not None and a.mla) else -1
+
+    len_axes = []
+    if not batch_ok:
+        len_axes.append("data")
+    if not heads_ok:
+        len_axes.append(MODEL_AXIS)
+    len_ax = tuple(len_axes) if len_axes else None
+
+    def one(leaf):
+        dims = [None] * leaf.ndim
+        if leaf.ndim >= 2 and batch_ok:
+            dims[1] = batch_ax
+        used_model = False
+        for i in range(2, leaf.ndim):
+            sz = leaf.shape[i]
+            if sz == max_len:
+                dims[i] = len_ax
+                used_model = used_model or (len_ax and MODEL_AXIS in len_ax)
+            elif a is not None and a.mla is None and i == 3 and \
+                    sz == a.num_kv_heads and heads_ok:
+                dims[i] = MODEL_AXIS
+                used_model = True
+            elif sz == latent and not used_model:
+                dims[i] = MODEL_AXIS
+                used_model = True
+        if not used_model:
+            # SSM channel dims (mamba d_inner, rwkv head_dim): first large
+            # divisible trailing dim takes the model axis
+            for i in range(2, leaf.ndim):
+                if dims[i] is None and leaf.shape[i] >= 64 and \
+                        leaf.shape[i] % msize == 0:
+                    dims[i] = MODEL_AXIS
+                    break
+        return _clean(mesh, P(*dims), leaf.shape)
+
+    return jax.tree.map(one, caches_shape)
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the cell's step inputs (no allocation)."""
+    b, n = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {"frames": jax.ShapeDtypeStruct((b, n, cfg.frontend.input_dim),
+                                                    jnp.bfloat16)}
+        elif cfg.family == "vlm":
+            pl_ = cfg.frontend.prefix_len
+            batch = {"tokens": jax.ShapeDtypeStruct((b, n - pl_), i32),
+                     "patches": jax.ShapeDtypeStruct((b, pl_, cfg.frontend.input_dim),
+                                                     jnp.bfloat16)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, n), i32)}
+        if shape.kind == "train":
+            lab_n = n - (cfg.frontend.prefix_len if cfg.family == "vlm" else 0)
+            batch["labels"] = jax.ShapeDtypeStruct((b, lab_n), i32)
+        return batch
+    # decode: one new token against a cache of length n
+    caches = jax.eval_shape(
+        lambda: init_decode_caches(cfg, b, n))
+    return {"token": jax.ShapeDtypeStruct((b,), i32),
+            "caches": caches,
+            "cache_len": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def abstract_state(cfg: ModelConfig):
+    """ShapeDtypeStructs of params + opt state, via eval_shape (no alloc)."""
+    from repro.optim import init_opt_state
+
+    def mk():
+        p = model_init(jax.random.PRNGKey(0), cfg)
+        return p, init_opt_state(p)
+
+    return jax.eval_shape(mk)
+
+
+def shardings_of(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

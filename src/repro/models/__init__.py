@@ -1,0 +1,8 @@
+"""Model zoo: configs -> (init, loss_fn, prefill, decode_step)."""
+from repro.models.model import (
+    init, loss_fn, forward_logits, prefill, decode_step, init_decode_caches,
+    segments,
+)
+
+__all__ = ["init", "loss_fn", "forward_logits", "prefill", "decode_step",
+           "init_decode_caches", "segments"]

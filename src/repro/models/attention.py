@@ -1,0 +1,390 @@
+"""Model-level attention: GQA / MLA, qk-norm, RoPE, SFA, windows, KV caches.
+
+Three call modes share parameters:
+  * ``mode="train"``   — full-sequence causal (or bidirectional) attention.
+  * ``mode="prefill"`` — same compute, additionally returns the KV cache
+                         (sparse for SFA layers) for the decode engine.
+  * ``mode="decode"``  — one new token against the cache; SFA scoring reads
+                         the cache *sparsely* (O(nk) gathered bytes — the IO
+                         pattern the roofline measures; the Pallas decode
+                         kernel is the TPU-hardened version of the same
+                         access pattern).
+
+SFA-with-RoPE (paper A.1): ``sfa_rope_protect`` leading head dims are kept
+dense (always-selected) so positional phase survives sparsification; Top-k
+applies to the remaining dims.
+
+MLA (+SFA, paper Table 10) uses the *absorbed* formulation: scores are taken
+in the shared latent space (q_eff = q_nope·W_ukᵀ against c_kv), and SFA
+sparsifies the latent codes — the decode cache stores c_kv sparsely for
+scoring plus densely for the value aggregation, and k_pe densely.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, ModelConfig
+from repro.core.attention import chunked_attention, NEG_INF
+from repro.core.sparse import topk_st, sparsify, densify, SparseCode
+from repro.distributed.sharding import axis_size, constrain
+from repro.models.layers import dense, dense_init, norm_init, apply_norm, rope
+
+
+def _pad_heads(q, num_heads: int):
+    """Zero-pad the q-head axis up to the TP degree.
+
+    Measured on llama3.2 train_4k (§Perf i6): padding 24->32 heads + classic
+    head-TP costs 10.0 s of collectives vs 7.3 s for sequence-parallel q —
+    the classic-TP backward's residual-sized f32 all-reduces outweigh the SP
+    dk reduce. So padding is DISABLED (pad=0) and indivisible-head archs use
+    SP; kept for A/B re-runs on other topologies."""
+    return q, 0
+
+
+def _constrain_qkv(q, k, v, num_heads: int):
+    """Attention activation sharding (§Perf i1): heads take the model axis
+    when divisible (classic TP); otherwise sequence-parallel q — XLA's
+    fallback for unshardable heads is involuntary full replication
+    (338 GB/step measured)."""
+    msize = axis_size("model")
+    if num_heads % msize == 0:
+        q = constrain(q, ("batch", None, "heads", None))
+    else:
+        q = constrain(q, ("batch", "seq_sp", None, None))
+    k = constrain(k, ("batch", None, None, None))
+    v = constrain(v, ("batch", None, None, None))
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def attention_init(rng, cfg: ModelConfig):
+    a = cfg.attention
+    d = cfg.d_model
+    rs = jax.random.split(rng, 12)
+    if a.mla is not None:
+        m = a.mla
+        h = a.num_heads
+        p = {
+            "w_dq": dense_init(rs[0], d, m.q_lora_rank),
+            "q_norm": norm_init(m.q_lora_rank),
+            "w_uq_nope": dense_init(rs[1], m.q_lora_rank, h * m.nope_head_dim),
+            "w_uq_pe": dense_init(rs[2], m.q_lora_rank, h * m.rope_head_dim),
+            "w_dkv": dense_init(rs[3], d, m.kv_lora_rank),
+            "kv_norm": norm_init(m.kv_lora_rank),
+            "w_uk": dense_init(rs[4], m.kv_lora_rank, h * m.nope_head_dim),
+            "w_kpe": dense_init(rs[5], d, m.rope_head_dim),
+            "w_uv": dense_init(rs[6], m.kv_lora_rank, h * m.v_head_dim),
+            "w_o": dense_init(rs[7], h * m.v_head_dim, d),
+        }
+        return p
+    # fused QKV (§Perf i7): one column-parallel matmul -> one backward
+    # dL/dx all-reduce instead of three, and a bigger MXU tile
+    p = {
+        "w_qkv": dense_init(rs[0], d,
+                            (a.num_heads + 2 * a.num_kv_heads) * a.head_dim),
+        "w_o": dense_init(rs[3], a.num_heads * a.head_dim, d),
+    }
+    if a.qk_norm:
+        p["q_norm"] = norm_init(a.head_dim)
+        p["k_norm"] = norm_init(a.head_dim)
+    return p
+
+
+# --------------------------------------------------------------------------
+# SFA helpers
+# --------------------------------------------------------------------------
+
+def _sfa_st(x, a: AttentionConfig):
+    """Straight-through Top-k with optional protected leading RoPE dims."""
+    if a.sfa_k is None:
+        return x
+    p = a.sfa_rope_protect
+    if p:
+        return jnp.concatenate([x[..., :p], topk_st(x[..., p:], a.sfa_k)], -1)
+    return topk_st(x, a.sfa_k)
+
+
+def _sfa_code(x, a: AttentionConfig) -> SparseCode:
+    """Sparse code of the non-protected dims (cache storage format)."""
+    p = a.sfa_rope_protect
+    return sparsify(x[..., p:], a.sfa_k)
+
+
+def _gather_score(q, k_vals, k_idx, scale):
+    """Sparse decode scoring: s[b,n,h] = Σ_t k_vals[b,n,h,t]·q[b,h,idx].
+
+    q: (b, h, d); k_vals/k_idx: (b, n, h, k). O(n·k) touched K bytes — the
+    paper's decode IO claim, expressed as an XLA gather.
+    """
+    b, n, h, k = k_vals.shape
+    qb = jnp.broadcast_to(q[:, None].astype(jnp.float32), (b, n, h, q.shape[-1]))
+    qg = jnp.take_along_axis(qb, k_idx, axis=-1)            # (b, n, h, k)
+    return (qg * k_vals.astype(jnp.float32)).sum(-1) * scale  # (b, n, h)
+
+
+# --------------------------------------------------------------------------
+# cache
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-layer decode cache (caller stacks across layers)."""
+    a = cfg.attention
+    if a.mla is not None:
+        m = a.mla
+        c = {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+             "kpe": jnp.zeros((batch, max_len, m.rope_head_dim), dtype)}
+        if a.sfa_k is not None:
+            # XLA-proxy layout: the sparsified latent in DENSE layout (zeros
+            # off-support). Head-independent per-token codes make per-head
+            # gather-scoring pathological under SPMD (measured 7.6 TB/step of
+            # involuntary gathers — EXPERIMENTS.md §Perf i2); a dense-layout
+            # einsum is mathematically identical and shards trivially. The
+            # Pallas decode kernel keeps the compact (vals, idx) layout.
+            c["ckv_sp"] = jnp.zeros((batch, max_len, m.kv_lora_rank), dtype)
+        return c
+    hkv, hd = a.num_kv_heads, a.head_dim
+    if a.sfa_k is not None:
+        p = a.sfa_rope_protect
+        c = {"k_vals": jnp.zeros((batch, max_len, hkv, a.sfa_k), dtype),
+             "k_idx": jnp.zeros((batch, max_len, hkv, a.sfa_k), jnp.int32),
+             "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+        if p:
+            c["k_protect"] = jnp.zeros((batch, max_len, hkv, p), dtype)
+        return c
+    return {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+
+
+def _write_cache(cache, updates, pos):
+    """Insert one token's entries at position ``pos`` (b,)-ragged."""
+    out = dict(cache)
+    b = pos.shape[0] if jnp.ndim(pos) else None
+    for key, val in updates.items():
+        arr = cache[key]
+        # val: (b, 1, ...) one new token
+        if b is None:
+            out[key] = jax.lax.dynamic_update_slice_in_dim(arr, val.astype(arr.dtype), pos, axis=1)
+        else:
+            idx = pos[:, None]                              # (b, 1)
+            out[key] = jax.vmap(
+                lambda a_, v_, i_: jax.lax.dynamic_update_slice_in_dim(
+                    a_, v_.astype(a_.dtype), i_, axis=0))(arr, val, pos)
+    return out
+
+
+# --------------------------------------------------------------------------
+# apply
+# --------------------------------------------------------------------------
+
+class AttentionOut(NamedTuple):
+    out: jax.Array
+    cache: Optional[dict]
+    distill: jax.Array = jnp.zeros((), jnp.float32)
+
+
+def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
+                    window=None, mode: str = "train", cache=None,
+                    cache_len=None) -> AttentionOut:
+    a = cfg.attention
+    if a.mla is not None:
+        return _mla_apply(params, x, cfg=cfg, positions=positions, mode=mode,
+                          cache=cache, cache_len=cache_len)
+    b, n, d_model = x.shape
+    h, hkv, hd = a.num_heads, a.num_kv_heads, a.head_dim
+    dt = x.dtype
+    qkv = dense(params["w_qkv"], x, dt)
+    q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
+    q = q.reshape(b, n, h, hd)
+    k = k.reshape(b, n, hkv, hd)
+    v = v.reshape(b, n, hkv, hd)
+    if a.qk_norm:
+        q = apply_norm(params["q_norm"], q)
+        k = apply_norm(params["k_norm"], k)
+    if a.rope:
+        if positions is None:
+            positions = jnp.arange(n)[None, :]
+        q = rope(q, positions, theta=a.rope_theta)
+        k = rope(k, positions, theta=a.rope_theta)
+    scale = hd ** -0.5
+
+    if mode == "decode":
+        assert cache is not None and cache_len is not None
+        # write new token K/V, then score against the (sparse) cache
+        if a.sfa_k is not None:
+            p = a.sfa_rope_protect
+            kc = _sfa_code(k, a)                      # (b, 1, hkv, k)
+            upd = {"k_vals": kc.values, "k_idx": kc.indices, "v": v}
+            if p:
+                upd["k_protect"] = k[..., :p]
+            cache = _write_cache(cache, upd, cache_len)
+            qs = _sfa_st(q, a)                        # sparse q (dense layout)
+            nmax = cache["v"].shape[1]
+            kv_r = _expand_kv(cache["k_vals"], h)     # (b, nmax, h, k)
+            ki_r = _expand_kv(cache["k_idx"], h)
+            s = _gather_score(
+                jnp.einsum("bqhd->bhd", qs[..., p:] if p else qs),
+                kv_r, ki_r, scale)
+            if p:
+                kp = _expand_kv(cache["k_protect"], h)    # (b, nmax, h, p)
+                s = s + jnp.einsum("bhp,bnhp->bnh", q[:, 0, :, :p].astype(jnp.float32),
+                                   kp.astype(jnp.float32)) * scale
+        else:
+            cache = _write_cache(cache, {"k": k, "v": v}, cache_len)
+            nmax = cache["v"].shape[1]
+            kr = _expand_kv(cache["k"], h)
+            s = jnp.einsum("bqhd,bnhd->bnh", q.astype(jnp.float32),
+                           kr.astype(jnp.float32))[:, :, :] * scale
+        # mask: valid prefix (+ sliding window)
+        posn = jnp.arange(nmax)[None, :]
+        limit = (cache_len + 1)[:, None] if jnp.ndim(cache_len) else cache_len + 1
+        ok = posn < limit
+        if window is not None:
+            ok = ok & (posn > limit - 1 - window)
+        s = jnp.where(ok[..., None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=1)                    # over n
+        vr = _expand_kv(cache["v"], h)
+        o = jnp.einsum("bnh,bnhd->bhd", pr, vr.astype(jnp.float32))[:, None]
+        o = o.astype(dt).reshape(b, 1, h * hd)
+        return AttentionOut(dense(params["w_o"], o, dt), cache)
+
+    # train / prefill: full-sequence attention (heads padded to TP degree)
+    qs = _sfa_st(q, a)
+    ks = _sfa_st(k, a)
+    qs, pad_h = _pad_heads(qs, h)
+    h_eff = h + pad_h
+    kr = _expand_kv(ks, h_eff)
+    vr = _expand_kv(v, h_eff)
+    qs, kr, vr = _constrain_qkv(qs, kr, vr, h_eff)
+    o = chunked_attention(qs, kr, vr, causal=a.causal, window=window,
+                          scale=scale, chunk_size=min(1024, max(n, 128)))
+    if pad_h:
+        o = o[:, :, :h]
+    distill = jnp.zeros((), jnp.float32)
+    if mode == "train" and a.sfa_k is not None and cfg.sfa_distill > 0:
+        # paper Eq. 8: pull SFA head outputs toward stop-grad dense outputs
+        o_dense = jax.lax.stop_gradient(chunked_attention(
+            q, _expand_kv(k, h), _expand_kv(v, h), causal=a.causal,
+            window=window, scale=scale, chunk_size=min(1024, max(n, 128))))
+        distill = jnp.mean(jnp.square(o.astype(jnp.float32) -
+                                      o_dense.astype(jnp.float32)))
+    o = o.reshape(b, n, h * hd)
+    out = dense(params["w_o"], o, dt)
+    new_cache = None
+    if mode == "prefill":
+        if a.sfa_k is not None:
+            p = a.sfa_rope_protect
+            kc = _sfa_code(k, a)
+            new_cache = {"k_vals": kc.values.astype(dt), "k_idx": kc.indices,
+                         "v": v}
+            if p:
+                new_cache["k_protect"] = k[..., :p]
+        else:
+            new_cache = {"k": k, "v": v}
+    return AttentionOut(out, new_cache, distill)
+
+
+def _expand_kv(t, h):
+    """(b, n, hkv, ...) -> (b, n, h, ...) GQA head repeat."""
+    b, n, hkv = t.shape[:3]
+    if hkv == h:
+        return t
+    rep = h // hkv
+    return jnp.repeat(t, rep, axis=2)
+
+
+# --------------------------------------------------------------------------
+# MLA (+ SFA on the latent) — absorbed formulation
+# --------------------------------------------------------------------------
+
+def _mla_project(params, x, *, cfg: ModelConfig, positions):
+    a, m = cfg.attention, cfg.attention.mla
+    b, n, _ = x.shape
+    h = a.num_heads
+    dt = x.dtype
+    cq = apply_norm(params["q_norm"], dense(params["w_dq"], x, dt))
+    q_nope = dense(params["w_uq_nope"], cq, dt).reshape(b, n, h, m.nope_head_dim)
+    q_pe = dense(params["w_uq_pe"], cq, dt).reshape(b, n, h, m.rope_head_dim)
+    ckv = apply_norm(params["kv_norm"], dense(params["w_dkv"], x, dt))
+    kpe = dense(params["w_kpe"], x, dt).reshape(b, n, 1, m.rope_head_dim)
+    if positions is None:
+        positions = jnp.arange(n)[None, :]
+    q_pe = rope(q_pe, positions, theta=a.rope_theta)
+    kpe = rope(kpe, positions, theta=a.rope_theta)
+    # absorb W_uk: q_eff[h] = q_nope[h] @ W_uk[h]^T  -> latent-space query
+    w_uk = params["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_eff = jnp.einsum("bnhd,rhd->bnhr", q_nope, w_uk.astype(dt))
+    return q_eff, q_pe, ckv, kpe
+
+
+def _mla_out(params, o_lat, *, cfg: ModelConfig):
+    a, m = cfg.attention, cfg.attention.mla
+    b, n, h, r = o_lat.shape
+    dt = o_lat.dtype
+    w_uv = params["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bnhr,rhd->bnhd", o_lat, w_uv.astype(dt))
+    return dense(params["w_o"], o.reshape(b, n, h * m.v_head_dim), dt)
+
+
+def _mla_apply(params, x, *, cfg: ModelConfig, positions, mode, cache,
+               cache_len) -> AttentionOut:
+    a, m = cfg.attention, cfg.attention.mla
+    b, n, _ = x.shape
+    h = a.num_heads
+    dt = x.dtype
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    q_eff, q_pe, ckv, kpe = _mla_project(params, x, cfg=cfg, positions=positions)
+
+    if mode == "decode":
+        assert cache is not None and cache_len is not None
+        upd = {"ckv": ckv, "kpe": kpe[:, :, 0]}
+        if a.sfa_k is not None:
+            upd["ckv_sp"] = topk_st(ckv, a.sfa_k)
+        cache = _write_cache(cache, upd, cache_len)
+        nmax = cache["ckv"].shape[1]
+        if a.sfa_k is not None:
+            qs = topk_st(q_eff, a.sfa_k)                 # (b, 1, h, r)
+            s = jnp.einsum("bqhr,bnr->bnh", qs.astype(jnp.float32),
+                           cache["ckv_sp"].astype(jnp.float32)) * scale
+        else:
+            s = jnp.einsum("bqhr,bnr->bnh", q_eff.astype(jnp.float32),
+                           cache["ckv"].astype(jnp.float32)) * scale
+        s = s + jnp.einsum("bqhp,bnp->bnh", q_pe.astype(jnp.float32),
+                           cache["kpe"].astype(jnp.float32)) * scale
+        posn = jnp.arange(nmax)[None, :]
+        limit = (cache_len + 1)[:, None] if jnp.ndim(cache_len) else cache_len + 1
+        s = jnp.where((posn < limit)[..., None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=1)
+        o_lat = jnp.einsum("bnh,bnr->bhr", pr,
+                           cache["ckv"].astype(jnp.float32))[:, None].astype(dt)
+        return AttentionOut(_mla_out(params, o_lat, cfg=cfg), cache)
+
+    # train / prefill: latent attention with 1 shared kv "head"
+    if a.sfa_k is not None:
+        q_eff = topk_st(q_eff, a.sfa_k)
+        ckv_s = topk_st(ckv, a.sfa_k)
+    else:
+        ckv_s = ckv
+    qcat = jnp.concatenate([q_eff, q_pe], axis=-1)          # (b,n,h,r+dr)
+    qcat, pad_h = _pad_heads(qcat, h)
+    h_eff = h + pad_h
+    kcat = jnp.concatenate([ckv_s[:, :, None], kpe], axis=-1)  # (b,n,1,r+dr)
+    kcat = jnp.broadcast_to(kcat, (b, n, h_eff, kcat.shape[-1]))
+    vlat = jnp.broadcast_to(ckv[:, :, None], (b, n, h_eff, m.kv_lora_rank))
+    qcat, kcat, vlat = _constrain_qkv(qcat, kcat, vlat, h_eff)
+    o_lat = chunked_attention(qcat, kcat, vlat, causal=a.causal, scale=scale,
+                              chunk_size=min(1024, max(n, 128)))
+    if pad_h:
+        o_lat = o_lat[:, :, :h]
+    out = _mla_out(params, o_lat, cfg=cfg)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"ckv": ckv, "kpe": kpe[:, :, 0]}
+        if a.sfa_k is not None:
+            new_cache["ckv_sp"] = topk_st(ckv, a.sfa_k).astype(dt)
+    return AttentionOut(out, new_cache)

@@ -1,0 +1,129 @@
+"""Mamba-1 selective SSM block (jamba's recurrent layer).
+
+Training/prefill uses a chunked associative scan: the sequence is split into
+chunks; within a chunk the recurrence h_t = a_t ⊙ h_{t-1} + b_t runs as a
+parallel prefix (associative_scan), and a lax.scan carries the boundary state
+across chunks. This bounds the (b, n, d_inner, d_state) working set to one
+chunk — essential at 500k context — and the chunk body is rematerialized in
+the backward pass. Decode is the O(1) single-step recurrence on a carried
+(conv window, ssm state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense, dense_init
+
+
+def mamba_init(rng, d_model: int, ssm: SSMConfig):
+    di = ssm.expand * d_model
+    dtr = ssm.dt_rank or -(-d_model // 16)
+    rs = jax.random.split(rng, 8)
+    return {
+        "in_proj": dense_init(rs[0], d_model, 2 * di),
+        "conv_w": jax.random.normal(rs[1], (ssm.conv_dim, di)) * 0.2,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": dense_init(rs[2], di, dtr + 2 * ssm.state_dim),
+        "dt_proj": dense_init(rs[3], dtr, di),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.exp(jax.random.uniform(rs[4], (di,),
+                    minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))) - 1.0 + 1e-9),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ssm.state_dim + 1, dtype=jnp.float32), (di, ssm.state_dim))),
+        "d_skip": jnp.ones((di,)),
+        "out_proj": dense_init(rs[5], di, d_model),
+    }
+
+
+def _ssm_scan_chunked(a, bx, h0, chunk: int):
+    """h_t = a_t ⊙ h_{t-1} + bx_t over axis 1; returns all h plus final state.
+
+    a, bx: (b, n, di, s) — n must be a multiple of chunk."""
+    b, n, di, s = a.shape
+    nch = n // chunk
+    a = a.reshape(b, nch, chunk, di, s)
+    bx = bx.reshape(b, nch, chunk, di, s)
+
+    def chunk_body(h, xs):
+        ac, bc = xs                                       # (b, chunk, di, s)
+        def op(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        a_sc, b_sc = jax.lax.associative_scan(op, (ac, bc), axis=1)
+        hs = a_sc * h[:, None] + b_sc                     # (b, chunk, di, s)
+        return hs[:, -1], hs
+
+    chunk_body = jax.checkpoint(chunk_body)
+    hN, hs = jax.lax.scan(chunk_body, h0,
+                          (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bx, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, n, di, s)
+    return hs, hN
+
+
+def mamba_apply(params, x, ssm: SSMConfig, *, mode: str = "train",
+                state=None, chunk: int = 256):
+    """x: (b, n, d). mode 'decode': n == 1, state = {'conv': (b, cw, di),
+    'h': (b, di, s)}; returns (out, new_state). Other modes return
+    (out, state_if_prefill)."""
+    b, n, d = x.shape
+    di = ssm.expand * d
+    s = ssm.state_dim
+    dt_ = x.dtype
+    xz = dense(params["in_proj"], x, dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)                      # (b, n, di)
+
+    cw = ssm.conv_dim
+    if mode == "decode":
+        conv_win = jnp.concatenate([state["conv"][:, 1:], xi], axis=1)
+        xc = jnp.einsum("bwc,wc->bc", conv_win.astype(jnp.float32),
+                        params["conv_w"]) + params["conv_b"]
+        xc = jax.nn.silu(xc)[:, None].astype(dt_)          # (b, 1, di)
+    else:
+        xpad = jnp.pad(xi.astype(jnp.float32), ((0, 0), (cw - 1, 0), (0, 0)))
+        # causal depthwise conv as a sum of shifted scales (cw is tiny);
+        # f32 accumulation matches the decode path bit-for-bit.
+        xc = sum(xpad[:, i:i + n] * params["conv_w"][i]
+                 for i in range(cw)) + params["conv_b"]
+        xc = jax.nn.silu(xc).astype(dt_)
+        conv_tail = jnp.concatenate(
+            [jnp.pad(xi, ((0, 0), (max(cw - n, 0), 0), (0, 0)))[:, -cw:],], axis=1) \
+            if n < cw else xi[:, -cw:]
+
+    proj = dense(params["x_proj"], xc, dt_)
+    dtr = params["dt_proj"]["w"].shape[0]
+    dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + s], axis=-1)
+    delta = jax.nn.softplus(dense(params["dt_proj"], dt_raw, dt_)
+                            .astype(jnp.float32) + params["dt_bias"])  # (b,n,di)
+    a_cont = -jnp.exp(params["a_log"])                     # (di, s)
+    a_disc = jnp.exp(delta[..., None] * a_cont)            # (b,n,di,s)
+    bxu = (delta * xc.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]            # (b,n,di,s)
+
+    if mode == "decode":
+        h = state["h"] * a_disc[:, 0] + bxu[:, 0]          # (b, di, s)
+        y = jnp.einsum("bds,bs->bd", h, cmat.astype(jnp.float32)[:, 0])[:, None]
+        new_state = {"conv": conv_win, "h": h}
+    else:
+        pad_n = (-n) % chunk
+        if pad_n:
+            a_disc = jnp.pad(a_disc, ((0, 0), (0, pad_n), (0, 0), (0, 0)),
+                             constant_values=1.0)
+            bxu = jnp.pad(bxu, ((0, 0), (0, pad_n), (0, 0), (0, 0)))
+        h0 = state["h"] if state is not None else jnp.zeros((b, di, s), jnp.float32)
+        hs, hN = _ssm_scan_chunked(a_disc, bxu, h0, min(chunk, a_disc.shape[1]))
+        hs = hs[:, :n]
+        y = jnp.einsum("bnds,bns->bnd", hs, cmat.astype(jnp.float32))
+        new_state = {"conv": conv_tail, "h": hN} if mode == "prefill" else None
+
+    y = y + xc.astype(jnp.float32) * params["d_skip"]
+    y = y.astype(dt_) * jax.nn.silu(z)
+    return dense(params["out_proj"], y, dt_), new_state
+
+
+def mamba_init_state(b: int, d_model: int, ssm: SSMConfig, dtype=jnp.bfloat16):
+    di = ssm.expand * d_model
+    return {"conv": jnp.zeros((b, ssm.conv_dim, di), dtype),
+            "h": jnp.zeros((b, di, ssm.state_dim), jnp.float32)}

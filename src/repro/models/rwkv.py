@@ -1,0 +1,155 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: the per-head state S ∈ R^{dh×dh} evolves as
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t,   y_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+with w_t = exp(-exp(w0 + LoRA(x_t))) a *data-dependent* per-channel decay —
+the paper's (arXiv:2404.05892) core novelty vs RWKV-5. No QKᵀ score matrix
+exists, so SFA is inapplicable (DESIGN.md §Arch-applicability).
+
+Training runs a chunked scan (sequential over chunks of the sequence,
+rematerialized inner loop); decode carries (x_prev, S) — O(1) per token,
+which is what makes the long_500k cell trivial for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig
+from repro.models.layers import dense, dense_init, norm_init, apply_norm
+
+
+def rwkv_tm_init(rng, d_model: int, cfg: RWKVConfig):
+    h = d_model // cfg.head_dim
+    rs = jax.random.split(rng, 12)
+    def lora(r, rank):
+        return {"a": dense_init(r, d_model, rank, scale=0.01),
+                "b": dense_init(jax.random.fold_in(r, 7), rank, d_model, scale=0.01)}
+    return {
+        "mix_x": jnp.full((5, d_model), 0.5),          # r,k,v,w,g token-shift mixes
+        "w_r": dense_init(rs[0], d_model, d_model),
+        "w_k": dense_init(rs[1], d_model, d_model),
+        "w_v": dense_init(rs[2], d_model, d_model),
+        "w_g": dense_init(rs[3], d_model, d_model),
+        "w_o": dense_init(rs[4], d_model, d_model),
+        "w0": jnp.zeros((d_model,)) - 6.0,             # decay base (slow)
+        "w_lora": lora(rs[5], cfg.decay_lora),
+        "u": jax.random.normal(rs[6], (h, cfg.head_dim)) * 0.1,  # bonus
+        "ln_out": norm_init(d_model, "layernorm"),
+    }
+
+
+def rwkv_cm_init(rng, d_model: int, d_ff: int):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {"mix_k": jnp.full((d_model,), 0.5),
+            "mix_r": jnp.full((d_model,), 0.5),
+            "w_k": dense_init(r1, d_model, d_ff),
+            "w_v": dense_init(r2, d_ff, d_model),
+            "w_r": dense_init(r3, d_model, d_model)}
+
+
+def _token_shift(x, x_prev):
+    """x_{t-1} with x_prev seeding position 0. x: (b, n, d)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int):
+    """Chunked WKV recurrence.
+
+    r,k,v: (b, n, h, dh); w: (b, n, h, dh) decay in (0,1); u: (h, dh);
+    s0: (b, h, dh, dh). Returns (y (b,n,h,dh), sN).
+    Within a chunk the recurrence is sequential (scan); chunks rematerialize.
+    """
+    b, n, h, dh = r.shape
+    nch = n // chunk
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                                # (b, h, dh)
+        kv = kt[..., :, None] * vt[..., None, :]           # (b,h,dh,dh)
+        y = jnp.einsum("bhd,bhde->bhe", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    def chunk_body(s, xs):
+        rc, kc, vc, wc = xs                                # (b, chunk, h, dh)
+        s, ys = jax.lax.scan(
+            step, s, (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+                      jnp.moveaxis(vc, 1, 0), jnp.moveaxis(wc, 1, 0)))
+        return s, jnp.moveaxis(ys, 0, 1)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    to_chunks = lambda t: jnp.moveaxis(
+        t.reshape(b, nch, chunk, h, dh), 1, 0)
+    sN, ys = jax.lax.scan(chunk_body, s0, (to_chunks(r), to_chunks(k),
+                                           to_chunks(v), to_chunks(w)))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, n, h, dh), sN
+
+
+def rwkv_time_mix(params, x, cfg: RWKVConfig, *, mode="train", state=None,
+                  chunk: int = 128):
+    """state: {'x_prev': (b, d), 's': (b, h, dh, dh)}. Returns (out, state)."""
+    p = params
+    b, n, d = x.shape
+    h, dh = d // cfg.head_dim, cfg.head_dim
+    dt_ = x.dtype
+    x_prev = state["x_prev"] if state is not None else jnp.zeros((b, d), dt_)
+    xs = _token_shift(x, x_prev)
+    mix = p["mix_x"].astype(dt_)                            # (5, d)
+    xr, xk, xv, xw, xg = (x * mix[i] + xs * (1 - mix[i]) for i in range(5))
+    r = dense(p["w_r"], xr, dt_).reshape(b, n, h, dh)
+    k = dense(p["w_k"], xk, dt_).reshape(b, n, h, dh)
+    v = dense(p["w_v"], xv, dt_).reshape(b, n, h, dh)
+    g = jax.nn.silu(dense(p["w_g"], xg, dt_))
+    # data-dependent decay (the Finch novelty)
+    wl = dense(p["w_lora"]["b"],
+               jnp.tanh(dense(p["w_lora"]["a"], xw, dt_)), dt_)
+    w = jnp.exp(-jnp.exp((p["w0"] + wl.astype(jnp.float32))))  # (b,n,d) in (0,1)
+    w = w.reshape(b, n, h, dh)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if mode == "decode":
+        s = state["s"]
+        kv = kf[:, 0, :, :, None] * vf[:, 0, :, None, :]
+        y = jnp.einsum("bhd,bhde->bhe", rf[:, 0],
+                       s + p["u"][..., None] * kv)[:, None]
+        sN = w[:, 0, ..., None] * s + kv
+    else:
+        s0 = state["s"] if state is not None else jnp.zeros((b, h, dh, dh), jnp.float32)
+        pad = (-n) % chunk
+        if pad:
+            rf, kf, vf = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                          for t in (rf, kf, vf))
+            w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        y, sN = _wkv_chunked(rf, kf, vf, w, p["u"], s0,
+                             min(chunk, rf.shape[1]))
+        y = y[:, :n]
+    y = apply_norm(p["ln_out"], y.reshape(b, n, d).astype(dt_), "layernorm")
+    out = dense(p["w_o"], y * g.reshape(b, n, d), dt_)
+    new_state = {"x_prev": x[:, -1], "s": sN} if mode in ("decode", "prefill") else None
+    return out, new_state
+
+
+def rwkv_channel_mix(params, x, *, mode="train", state=None):
+    """Squared-ReLU channel mix with token shift. state: {'x_prev': (b, d)}."""
+    b, n, d = x.shape
+    dt_ = x.dtype
+    x_prev = state["x_prev"] if state is not None else jnp.zeros((b, d), dt_)
+    xs = _token_shift(x, x_prev)
+    mk = params["mix_k"].astype(dt_)
+    mr = params["mix_r"].astype(dt_)
+    xk = x * mk + xs * (1 - mk)
+    xr = x * mr + xs * (1 - mr)
+    kk = jnp.square(jax.nn.relu(dense(params["w_k"], xk, dt_)))
+    out = jax.nn.sigmoid(dense(params["w_r"], xr, dt_)) * \
+        dense(params["w_v"], kk, dt_)
+    new_state = {"x_prev": x[:, -1]} if mode in ("decode", "prefill") else None
+    return out, new_state
+
+
+def rwkv_init_state(b: int, d_model: int, cfg: RWKVConfig, dtype=jnp.bfloat16):
+    h, dh = d_model // cfg.head_dim, cfg.head_dim
+    return {"tm": {"x_prev": jnp.zeros((b, d_model), dtype),
+                   "s": jnp.zeros((b, h, dh, dh), jnp.float32)},
+            "cm": {"x_prev": jnp.zeros((b, d_model), dtype)}}

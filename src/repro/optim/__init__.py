@@ -1,0 +1,8 @@
+from repro.optim.optimizer import (
+    OptimizerConfig, OptState, init_opt_state, adamw_update, lion_update,
+    make_optimizer, schedule_lr, global_norm, clip_by_global_norm,
+)
+
+__all__ = ["OptimizerConfig", "OptState", "init_opt_state", "adamw_update",
+           "lion_update", "make_optimizer", "schedule_lr", "global_norm",
+           "clip_by_global_norm"]

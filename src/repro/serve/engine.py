@@ -1,0 +1,127 @@
+"""Batched decode engine: slots, prefill→decode handoff, sparse KV caches.
+
+Continuous-batching-lite: a fixed number of slots; requests prefill
+individually (batch-1 prefill, realistic for latency-bound serving) and are
+inserted into a slot of the batched decode cache; every ``step()`` decodes
+one token for all live slots. Greedy or temperature sampling; slots free on
+EOS/max_tokens. The decode step is a single jitted function over the full
+slot batch — the shape the decode_32k/long_500k dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_decode_caches, prefill
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_len: int = 512
+    eos_id: int = -1                 # -1: never stop on token
+    temperature: float = 0.0         # 0 = greedy
+    seed: int = 0
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.caches = init_decode_caches(cfg, ecfg.max_slots, ecfg.max_len)
+        self.lengths = jnp.zeros((ecfg.max_slots,), jnp.int32)
+        self.last_token = jnp.zeros((ecfg.max_slots,), jnp.int32)
+        self.live = np.zeros((ecfg.max_slots,), bool)
+        self.outputs: list[list[int]] = [[] for _ in range(ecfg.max_slots)]
+        self.budgets = np.zeros((ecfg.max_slots,), np.int64)
+        self._rng = jax.random.PRNGKey(ecfg.seed)
+        self._decode = jax.jit(
+            lambda p, tok, caches, lens: decode_step(p, tok, caches, lens,
+                                                     cfg))
+        self._prefill = jax.jit(lambda p, batch: prefill(p, batch, cfg))
+
+    # ------------------------------------------------------------------
+    def _insert_cache(self, slot: int, one_caches, prompt_len: int):
+        """Insert a batch-1 prefill cache (length n) into the slot of the
+        batched cache (length max_len)."""
+        def ins(dst, src):
+            if src is None:
+                return dst
+            # dst: (L, B, ...); src: (L, 1, ...) — length axis (if any) is
+            # axis 2 with size prompt_len, padded into max_len.
+            if (src.ndim >= 3 and src.shape[2] == prompt_len
+                    and dst.shape[2] == self.ecfg.max_len):
+                pad = [(0, 0)] * src.ndim
+                pad[2] = (0, self.ecfg.max_len - prompt_len)
+                src = jnp.pad(src, pad)
+            start = (0, slot) + (0,) * (src.ndim - 2)
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                                start)
+        self.caches = jax.tree.map(ins, self.caches, one_caches)
+
+    def add_request(self, prompt: np.ndarray, max_new_tokens: int = 32,
+                    extra_inputs: Optional[dict] = None) -> int:
+        free = np.where(~self.live)[0]
+        if len(free) == 0:
+            raise RuntimeError("no free slots")
+        slot = int(free[0])
+        batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v[None]) for k, v in
+                          extra_inputs.items()})
+        logits, one_caches = self._prefill(self.params, batch)
+        n = int(prompt.shape[0])
+        if self.cfg.frontend is not None and self.cfg.frontend.kind == "patch" \
+                and extra_inputs and "patches" in extra_inputs:
+            n += self.cfg.frontend.prefix_len
+        self._insert_cache(slot, one_caches, n)
+        tok = self._sample(logits)
+        self.lengths = self.lengths.at[slot].set(n)
+        self.last_token = self.last_token.at[slot].set(int(tok[0]))
+        self.outputs[slot] = [int(tok[0])]
+        self.budgets[slot] = max_new_tokens - 1
+        self.live[slot] = True
+        return slot
+
+    def _sample(self, logits):
+        if self.ecfg.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        return jax.random.categorical(
+            sub, logits / self.ecfg.temperature, -1).astype(jnp.int32)
+
+    def step(self) -> dict[int, int]:
+        """Decode one token for every live slot; returns {slot: token}."""
+        if not self.live.any():
+            return {}
+        live_before = self.live.copy()
+        logits, self.caches = self._decode(self.params, self.last_token,
+                                           self.caches, self.lengths)
+        toks = self._sample(logits)
+        out = {}
+        for slot in np.where(live_before)[0]:
+            t = int(toks[slot])
+            out[int(slot)] = t
+            self.outputs[slot].append(t)
+            self.budgets[slot] -= 1
+            if (t == self.ecfg.eos_id or self.budgets[slot] <= 0 or
+                    int(self.lengths[slot]) + 1 >= self.ecfg.max_len):
+                self.live[slot] = False
+        # every slot that decoded gained one cache entry
+        self.lengths = self.lengths + jnp.asarray(live_before, jnp.int32)
+        self.last_token = toks
+        return out
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 32,
+                 extra_inputs: Optional[dict] = None) -> list[int]:
+        """Single-request convenience wrapper."""
+        slot = self.add_request(prompt, max_new_tokens, extra_inputs)
+        while self.live[slot]:
+            self.step()
+        return self.outputs[slot]

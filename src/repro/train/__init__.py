@@ -1,0 +1,7 @@
+from repro.train.train_step import make_train_step, make_eval_step
+from repro.train import checkpoint
+from repro.train.fault_tolerance import FTConfig, Supervisor, StragglerMonitor
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "make_eval_step", "checkpoint", "FTConfig",
+           "Supervisor", "StragglerMonitor", "Trainer", "TrainerConfig"]

@@ -1,0 +1,117 @@
+"""Fault tolerance: supervised training with checkpoint/restart, straggler
+timeouts, and elastic re-meshing.
+
+On a real cluster the controller detects pod failure via missed heartbeats
+and relaunches; inside this single-host harness the same logic is exercised
+by fault *injection* (tests raise at chosen steps). The pieces:
+
+* ``Supervisor.run`` — drives the step function; on exception it restores
+  the last committed checkpoint and replays. Data is deterministic in step,
+  so replay is exactly-once w.r.t. the optimizer trajectory.
+* ``StragglerMonitor`` — wall-clock budget per step derived from a running
+  median; a breach triggers the configured action (warn / checkpoint-now /
+  re-mesh callback). At scale the breach signal is fed by per-host
+  heartbeats; the policy layer is identical.
+* ``elastic_remesh`` — rebuilds step functions for a smaller/larger mesh and
+  re-lays-out state from the (mesh-agnostic) checkpoint — the recovery path
+  when a pod is lost and training continues on the surviving pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+from repro.train import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 3.0     # step slower than median×factor => slow
+    min_steps_for_median: int = 5
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: FTConfig, on_straggler: Optional[Callable] = None):
+        self.cfg = cfg
+        self.times: list[float] = []
+        self.on_straggler = on_straggler
+        self.events: list[int] = []
+
+    def record(self, step: int, dt: float):
+        self.times.append(dt)
+        n = len(self.times)
+        if n >= self.cfg.min_steps_for_median:
+            med = sorted(self.times[-50:])[len(self.times[-50:]) // 2]
+            if dt > self.cfg.straggler_factor * med:
+                self.events.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, dt, med)
+
+
+class Supervisor:
+    """Checkpoint/restart driver around an arbitrary step closure."""
+
+    def __init__(self, cfg: FTConfig, *, save_state: Callable[[], Any],
+                 load_state: Callable[[Any], None]):
+        self.cfg = cfg
+        self.save_state = save_state      # () -> pytree of current state
+        self.load_state = load_state      # pytree -> install state
+        self.ckptr = ckpt_lib.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.monitor = StragglerMonitor(cfg)
+        self.restarts = 0
+
+    def _restore_latest(self) -> int:
+        step = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return 0
+        state = ckpt_lib.restore(self.cfg.ckpt_dir, step, self.save_state())
+        self.load_state(state)
+        return step
+
+    def run(self, step_fn: Callable[[int], dict], total_steps: int,
+            start_step: int = 0) -> list[dict]:
+        """step_fn(step) -> metrics. Restores+replays on failure."""
+        logs = []
+        step = start_step
+        while step < total_steps:
+            try:
+                t0 = time.monotonic()
+                metrics = step_fn(step)
+                self.monitor.record(step, time.monotonic() - t0)
+                logs.append({"step": step, **metrics})
+                step += 1
+                if step % self.cfg.ckpt_every == 0 or step == total_steps:
+                    self.ckptr.save(step, self.save_state())
+            except (KeyboardInterrupt,):
+                raise
+            except Exception as e:                       # noqa: BLE001
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.cfg.max_restarts}") from e
+                self.ckptr.wait()
+                step = self._restore_latest()
+                logs.append({"step": step, "event": "restart",
+                             "error": repr(e)})
+        self.ckptr.wait()
+        return logs
+
+
+def elastic_remesh(make_step_for_mesh: Callable[[Any], Callable], new_mesh,
+                   ckpt_dir: str, state_like: Any):
+    """Rebuild the jitted step for ``new_mesh`` and restore state onto it.
+
+    ``state_like`` must already carry the *new* mesh's shardings (the caller
+    re-derives them from the logical specs); arrays come from the last
+    committed checkpoint, which is stored unsharded and therefore
+    mesh-agnostic."""
+    step = ckpt_lib.latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError("no checkpoint to re-mesh from")
+    state = ckpt_lib.restore(ckpt_dir, step, state_like)
+    return make_step_for_mesh(new_mesh), state, step

@@ -1,0 +1,67 @@
+"""pjit-able train/eval step factories.
+
+``make_train_step(cfg, opt_cfg, ...)`` returns a pure function
+``(params, opt_state, batch[, err_state]) -> (params, opt_state, metrics)``
+with optional microbatch gradient accumulation (lax.scan over microbatches —
+constant memory in accumulation steps) and optional top-k gradient
+compression with error feedback before the DP mean.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compression
+from repro.models import loss_fn
+from repro.optim import OptimizerConfig, make_optimizer
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                    accum_steps: int = 1,
+                    grad_compression: Optional[float] = None):
+    update = make_optimizer(opt_cfg)
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, err_state=None):
+        if accum_steps == 1:
+            loss, metrics, grads = compute_grads(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                loss, metrics, grads = compute_grads(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g / accum_steps, acc, grads)
+                return (acc,), (loss, metrics["ce"])
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            (grads,), (losses, ces) = jax.lax.scan(micro, (zeros,), mbs)
+            loss = losses.mean()
+            metrics = {"ce": ces.mean(), "aux": jnp.zeros(()),
+                       "tokens": jnp.zeros(())}
+        if grad_compression is not None:
+            grads, err_state = compression.compress_tree(
+                grads, err_state, fraction=grad_compression)
+        new_params, new_opt, opt_metrics = update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        if grad_compression is not None:
+            return new_params, new_opt, metrics, err_state
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def step(params, batch):
+        loss, metrics = loss_fn(params, batch, cfg)
+        return dict(metrics, loss=loss)
+    return step

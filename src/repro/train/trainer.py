@@ -1,0 +1,89 @@
+"""High-level trainer: wires data, train step, checkpointing, FT together."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, markov_batch, copy_batch
+from repro.models import init as model_init
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step
+from repro.train.fault_tolerance import FTConfig, Supervisor
+from repro.distributed.compression import init_error_state
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    seed: int = 0
+    accum_steps: int = 1
+    grad_compression: Optional[float] = None
+    data_kind: str = "markov"
+    ft: FTConfig = dataclasses.field(default_factory=FTConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                 data_cfg: DataConfig, tcfg: TrainerConfig):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.tcfg = tcfg
+        rng = jax.random.PRNGKey(tcfg.seed)
+        self.params = model_init(rng, cfg)
+        self.opt_state = init_opt_state(self.params)
+        self.err_state = (init_error_state(self.params)
+                          if tcfg.grad_compression else None)
+        self.step_fn = jax.jit(make_train_step(
+            cfg, opt_cfg, accum_steps=tcfg.accum_steps,
+            grad_compression=tcfg.grad_compression))
+        self._batch_fn = (markov_batch if tcfg.data_kind == "markov"
+                          else copy_batch)
+
+    # --- FT state plumbing -------------------------------------------------
+    def _save_state(self):
+        state = {"params": self.params, "opt": self.opt_state}
+        if self.err_state is not None:
+            state["err"] = self.err_state
+        return state
+
+    def _load_state(self, state):
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        if "err" in state:
+            self.err_state = state["err"]
+
+    # --- loop ----------------------------------------------------------------
+    def run_step(self, step: int) -> dict:
+        batch = self._batch_fn(self.data_cfg, step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if self.err_state is not None:
+            self.params, self.opt_state, metrics, self.err_state = \
+                self.step_fn(self.params, self.opt_state, batch,
+                             self.err_state)
+        else:
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+        return {k: float(v) for k, v in metrics.items()}
+
+    def train(self, fault_injector=None) -> list[dict]:
+        sup = Supervisor(self.tcfg.ft, save_state=self._save_state,
+                         load_state=self._load_state)
+
+        def step_fn(step):
+            if fault_injector is not None:
+                fault_injector(step)
+            m = self.run_step(step)
+            if step % self.tcfg.log_every == 0:
+                print(f"step {step:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}")
+            return m
+
+        return sup.run(step_fn, self.tcfg.total_steps)

@@ -1,0 +1,231 @@
+"""Analytic FLOPs / parameter / HBM-byte models per (arch × shape).
+
+Why this exists: XLA's ``cost_analysis()`` counts each while-loop body ONCE
+(calibrated in tests/test_roofline.py), so scan-over-layers programs
+under-report by ×L and chunked scans by ×n_chunks. The roofline therefore
+uses these closed-form counts (standard napkin-math methodology, the same
+formulas used to size the cluster) and reports raw cost_analysis alongside.
+
+Conventions: matmul (m,k)×(k,n) = 2mkn FLOPs; causal attention halves the
+score/PV terms; backward = 2× forward; remat adds one forward recompute.
+SFA on TPU keeps attention *compute* dense (DESIGN.md §2) — the savings show
+up in the byte model (sparse Q/K/cache IO), exactly matching the kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import segments
+from repro.serve.kv_cache import cache_bytes_per_token, idx_bytes
+
+MOE_GROUP = 1024  # must match models.moe group_size default at scale
+
+
+# --------------------------------------------------------------------------
+# parameter counts
+# --------------------------------------------------------------------------
+
+def _attn_params(cfg: ModelConfig) -> int:
+    a = cfg.attention
+    d = cfg.d_model
+    if a.mla is not None:
+        m = a.mla
+        h = a.num_heads
+        return (d * m.q_lora_rank + m.q_lora_rank * h * m.nope_head_dim +
+                m.q_lora_rank * h * m.rope_head_dim + d * m.kv_lora_rank +
+                m.kv_lora_rank * h * m.nope_head_dim + d * m.rope_head_dim +
+                m.kv_lora_rank * h * m.v_head_dim + h * m.v_head_dim * d)
+    return d * a.head_dim * (a.num_heads * 2 + a.num_kv_heads * 2)
+
+
+def _mlp_params(cfg: ModelConfig, ff: int) -> int:
+    return cfg.d_model * ff * (3 if cfg.glu else 2)
+
+
+def _moe_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) params of one MoE layer."""
+    m = cfg.moe
+    per_exp = cfg.d_model * m.expert_dim * (3 if cfg.glu else 2)
+    shared = m.num_shared * per_exp
+    router = cfg.d_model * m.num_experts
+    return (m.num_experts * per_exp + shared + router,
+            m.top_k * per_exp + shared + router)
+
+
+def _mamba_params(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dtr = s.dt_rank or -(-d // 16)
+    return (d * 2 * di + s.conv_dim * di + di * (dtr + 2 * s.state_dim) +
+            dtr * di + di * s.state_dim + di * d + 2 * di)
+
+
+def _rwkv_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    r = cfg.rwkv
+    tm = 5 * d * d + d * r.decay_lora * 2 + d  # r,k,v,g,o + decay lora + w0
+    cm = 2 * d * cfg.d_ff + d * d
+    return tm + cm
+
+
+def param_count(cfg: ModelConfig) -> dict:
+    """{'total': N, 'active': N_active} (active differs only for MoE)."""
+    d = cfg.d_model
+    emb = cfg.vocab_size * d if cfg.family != "audio" else 0
+    head = 0 if cfg.tie_embeddings else cfg.vocab_size * d
+    fe = cfg.frontend.input_dim * d if cfg.frontend else 0
+    total = active = emb + head + fe
+    for kind, count in segments(cfg):
+        if kind == "rwkv":
+            p = _rwkv_params(cfg)
+            total += count * p
+            active += count * p
+        elif kind == "jamba":
+            per = cfg.hybrid_period
+            for i in range(per):
+                blk = (_attn_params(cfg) if i == cfg.hybrid_attn_index
+                       else _mamba_params(cfg))
+                if i % cfg.moe.every == cfg.moe.every - 1:
+                    tt, aa = _moe_params(cfg)
+                else:
+                    tt = aa = _mlp_params(cfg, cfg.d_ff)
+                total += count * (blk + tt)
+                active += count * (blk + aa)
+        else:
+            blk = _attn_params(cfg)
+            if kind == "block_moe":
+                tt, aa = _moe_params(cfg)
+            else:
+                ff = cfg.d_ff
+                if cfg.moe is not None:
+                    ff = max(cfg.d_ff, cfg.moe.expert_dim * cfg.moe.top_k)
+                tt = aa = _mlp_params(cfg, ff)
+            total += count * (blk + tt)
+            active += count * (blk + aa)
+    return {"total": total, "active": active}
+
+
+# --------------------------------------------------------------------------
+# FLOPs
+# --------------------------------------------------------------------------
+
+def _attn_flops_per_token(cfg: ModelConfig, ctx: int, *, causal=True,
+                          window=None) -> float:
+    """Projections + scores + PV for one token against ``ctx`` context."""
+    a = cfg.attention
+    eff = ctx / 2 if causal else ctx
+    if window is not None:
+        eff = min(eff, window)
+    proj = 2 * _attn_params(cfg)
+    if a.mla is not None:
+        m = a.mla
+        per_head = (m.kv_lora_rank + m.rope_head_dim) + m.kv_lora_rank
+        att = 2 * eff * a.num_heads * per_head
+    else:
+        att = 4 * eff * a.num_heads * a.head_dim
+    return proj + att
+
+
+def _layer_flops_per_token(cfg: ModelConfig, kind: str, ctx: int,
+                           layer_idx: int = 0) -> float:
+    d = cfg.d_model
+    if kind == "rwkv":
+        return 2 * _rwkv_params(cfg) + 3 * d * cfg.rwkv.head_dim
+    a = cfg.attention
+    window = None
+    if a is not None and a.window is not None:
+        pat = a.local_global_pattern
+        is_global = pat is not None and (layer_idx % (pat + 1)) == pat
+        window = None if is_global else a.window
+    att = _attn_flops_per_token(cfg, ctx, causal=cfg.causal, window=window)
+    if kind == "block_moe":
+        m = cfg.moe
+        _, act_p = _moe_params(cfg)
+        cap_disp = 4 * m.capacity_factor * m.top_k * min(MOE_GROUP, ctx) * d
+        mlp = 2 * act_p + cap_disp
+    else:
+        ff = cfg.d_ff
+        if cfg.moe is not None and kind == "block_dense":
+            ff = max(cfg.d_ff, cfg.moe.expert_dim * cfg.moe.top_k)
+        mlp = 2 * _mlp_params(cfg, ff)
+    return att + mlp
+
+
+def step_flops(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Whole-step FLOPs across all devices + MODEL_FLOPS reference."""
+    b, n = shape.global_batch, shape.seq_len
+    pc = param_count(cfg)
+    if shape.kind == "decode":
+        tokens = b                     # one new token per sequence
+        ctx = n
+    else:
+        tokens = b * n
+        ctx = n
+    fwd = 0.0
+    li = 0
+    for kind, count in segments(cfg):
+        if kind == "jamba":
+            for _ in range(count):
+                for i in range(cfg.hybrid_period):
+                    if i == cfg.hybrid_attn_index:
+                        f = _attn_flops_per_token(cfg, ctx)
+                    else:
+                        f = 2 * _mamba_params(cfg) + 8 * (
+                            cfg.ssm.expand * cfg.d_model) * cfg.ssm.state_dim
+                    if i % cfg.moe.every == cfg.moe.every - 1:
+                        _, ap = _moe_params(cfg)
+                        f += 2 * ap + 4 * cfg.moe.capacity_factor * \
+                            cfg.moe.top_k * min(MOE_GROUP, ctx) * cfg.d_model
+                    else:
+                        f += 2 * _mlp_params(cfg, cfg.d_ff)
+                    fwd += f * tokens
+                li += cfg.hybrid_period
+        else:
+            for j in range(count):
+                fwd += _layer_flops_per_token(cfg, kind, ctx, li + j) * tokens
+            li += count
+    fwd += 2 * cfg.d_model * cfg.vocab_size * tokens      # logits
+    if shape.kind == "train":
+        mult = 3 + (1 if cfg.remat else 0)                # fwd+bwd(2x)+remat
+        total = fwd * mult
+        model = 6.0 * pc["active"] * tokens
+    else:
+        total = fwd
+        model = 2.0 * pc["active"] * tokens
+    return {"total_flops": total, "forward_flops": fwd,
+            "model_flops": model, "useful_ratio": model / max(total, 1)}
+
+
+# --------------------------------------------------------------------------
+# HBM bytes (per device)
+# --------------------------------------------------------------------------
+
+def step_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, ndev: int) -> dict:
+    """Deploy-realistic per-device HBM traffic for one step.
+
+    Decode is the case the paper optimizes: cache reads dominate, and the
+    SFA cache bytes (sparse K + dense V) flow straight from
+    serve/kv_cache.py — the same accounting the kernels implement.
+    """
+    b, n = shape.global_batch, shape.seq_len
+    pc = param_count(cfg)
+    pbytes = pc["total"] * 4 / ndev                       # fp32 shards
+    per_tok = cache_bytes_per_token(cfg)
+    if shape.kind == "decode":
+        cache = per_tok["sfa"] * n * b / ndev
+        act = b * cfg.d_model * cfg.num_layers * 4 * 2 / ndev
+        total = pbytes + cache + act
+        dense_cache = per_tok["dense"] * n * b / ndev
+        return {"bytes_per_dev": total, "params": pbytes, "cache": cache,
+                "dense_cache_alt": pbytes + dense_cache + act}
+    tokens = b * n
+    act_io = tokens * cfg.d_model * 2 * 2 * cfg.num_layers / ndev
+    if shape.kind == "train":
+        opt = pc["total"] * (4 * 2 * 2) / ndev            # m,v read+write
+        grads = pc["total"] * 4 * 2 / ndev
+        total = 3 * pbytes + opt + grads + 3 * act_io
+    else:
+        total = pbytes + 2 * act_io
+    return {"bytes_per_dev": total, "params": pbytes, "act_io": act_io}

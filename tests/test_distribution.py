@@ -1,0 +1,180 @@
+"""Distribution-layer tests: sharding specs, roofline parser, small-mesh pjit.
+
+These run on the single CPU device (divisibility fallbacks make every spec
+legal on a 1x1 mesh); the 512-device production meshes are exercised by
+repro.launch.dryrun (results/dryrun_*.json).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, LM_SHAPES, get_config, skip_reason
+from repro.distributed.sharding import axis_rules, constrain, axis_size
+from repro.launch.mesh import make_debug_mesh
+from repro.launch import specs as S
+from repro.utils import roofline as R
+from repro.utils import analytic as A
+
+
+def test_param_specs_cover_tree_and_divisibility():
+    mesh = make_debug_mesh(model=1)
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        params_s, opt_s = S.abstract_state(cfg)
+        specs = S.param_specs(params_s, cfg, mesh)
+        leaves_p = jax.tree_util.tree_leaves(params_s)
+        leaves_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves_p) == len(leaves_s), arch
+        for leaf, spec in zip(leaves_p, leaves_s):
+            assert len(spec) <= len(leaf.shape), (arch, leaf.shape, spec)
+
+
+def test_input_specs_all_cells_no_allocation():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in LM_SHAPES:
+            if skip_reason(cfg, shape):
+                continue
+            ins = S.input_specs(cfg, shape)
+            for leaf in jax.tree_util.tree_leaves(ins):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, shape)
+
+
+def test_skip_matrix_is_40_cells():
+    run = skip = 0
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in LM_SHAPES:
+            if skip_reason(cfg, shape):
+                skip += 1
+            else:
+                run += 1
+    assert run + skip == 40
+    assert run == 32 and skip == 8
+
+
+def test_axis_rules_noop_outside_context(rng):
+    x = jax.random.normal(rng, (4, 8))
+    y = constrain(x, ("batch", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert axis_size("model") == 1
+
+
+def test_constrain_inside_mesh(rng):
+    mesh = make_debug_mesh(model=1)
+    with mesh, axis_rules(mesh):
+        assert axis_size("data") == 1
+        x = jax.random.normal(rng, (4, 8))
+        y = jax.jit(lambda x: constrain(x, ("batch", None)))(x)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# roofline machinery
+# --------------------------------------------------------------------------
+
+def test_hlo_collective_parser_counts_loop_trips():
+    hlo = """HloModule test
+
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ag.1 = f32[64]{0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %t = (s32[], f32[64]) tuple(%i, %ag.1)
+}
+
+%cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %ar.2 = f32[128]{0} all-reduce(%a), replica_groups={{0,1,2,3,4,5,6,7}}
+  %w = (s32[], f32[64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[64] get-tuple-element(%w), index=1
+}
+"""
+    stats = R.parse_collectives(hlo, 8)
+    assert stats.counts["all-gather"] == 12          # 12 loop trips
+    assert stats.counts["all-reduce"] == 1
+    # all-gather wire: 64*4 bytes * (4-1)/4 * 12
+    assert abs(stats.wire_bytes["all-gather"] - 64 * 4 * 0.75 * 12) < 1e-6
+    # all-reduce wire: 2 * 128*4 * 7/8
+    assert abs(stats.wire_bytes["all-reduce"] - 2 * 512 * 7 / 8) < 1e-6
+
+
+def test_cost_analysis_loop_undercount_calibration():
+    """Documents WHY the roofline uses analytic FLOPs: XLA counts a scan
+    body once (if this ever changes, the roofline source should flip)."""
+    x = jnp.ones((64, 64))
+    def ten_matmuls(a):
+        out, _ = jax.lax.scan(lambda c, _: (c @ x, None), a, None, length=10)
+        return out
+    c1 = jax.jit(lambda a: a @ x).lower(x).compile()
+    c10 = jax.jit(ten_matmuls).lower(x).compile()
+    f1 = c1.cost_analysis().get("flops", 0)
+    f10 = c10.cost_analysis().get("flops", 0)
+    assert f10 < 2 * f1, "XLA now unrolls loop costs; revisit roofline source"
+
+
+def test_analytic_param_counts_plausible():
+    """Closed-form parameter counts fall within the published ballpark."""
+    expect = {
+        "llama3-8b": (7.5e9, 8.5e9),
+        "llama3.2-3b": (2.8e9, 3.9e9),
+        "deepseek-7b": (6.0e9, 7.5e9),
+        "deepseek-v2-236b": (2.0e11, 2.6e11),
+        "jamba-v0.1-52b": (4.5e10, 6.0e10),
+        # assigned config says 48L (real Moonlight-16B has 27L) — we build
+        # the assignment verbatim, which yields ~28B total / ~4.8B active
+        "moonshot-v1-16b-a3b": (2.5e10, 3.1e10),
+        "rwkv6-3b": (2.5e9, 3.5e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = A.param_count(get_config(arch))["total"]
+        assert lo <= n <= hi, f"{arch}: {n:.3g} outside [{lo:.3g},{hi:.3g}]"
+
+
+def test_analytic_moe_active_lt_total():
+    pc = A.param_count(get_config("deepseek-v2-236b"))
+    assert pc["active"] < 0.15 * pc["total"]          # ~21B/236B
+
+
+def test_analytic_flops_track_model_flops():
+    """HLO-equivalent flops >= MODEL_FLOPS and within a sane multiple."""
+    from repro.configs.base import shape_by_name
+    for arch in ["llama3-8b", "deepseek-v2-236b", "rwkv6-3b"]:
+        cfg = get_config(arch)
+        fl = A.step_flops(cfg, shape_by_name("train_4k"))
+        assert fl["total_flops"] > fl["model_flops"] * 0.6, arch
+        assert fl["total_flops"] < fl["model_flops"] * 12, arch
+
+
+@pytest.mark.slow
+def test_small_mesh_pjit_train_step(rng):
+    """End-to-end pjit on the (1,1) debug mesh: specs are consistent."""
+    from repro.optim import OptimizerConfig, init_opt_state
+    from repro.train.train_step import make_train_step
+    from jax.sharding import NamedSharding
+
+    cfg = get_config("llama3.2-3b").reduced()
+    mesh = make_debug_mesh(model=1)
+    with mesh, axis_rules(mesh):
+        from repro.models import init as model_init
+        params = model_init(rng, cfg)
+        opt = init_opt_state(params)
+        pspec = S.param_specs(params, cfg, mesh)
+        sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        step = jax.jit(make_train_step(cfg, OptimizerConfig()),
+                       in_shardings=(sh(pspec),
+                                     sh(type(opt)(step=P(), m=pspec, v=pspec)),
+                                     jax.tree.map(lambda _: NamedSharding(
+                                         mesh, P(("data",), None)), batch)))
+        p2, o2, m = step(params, opt, batch)
+        assert np.isfinite(float(m["loss"]))

@@ -1,0 +1,157 @@
+"""Pallas kernel validation vs pure-jnp oracles (interpret mode, shape/dtype
+sweeps per the assignment)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparse import densify, SparseCode
+from repro.kernels import (
+    rtopk, flash_sfa, flash_sfa_decode, flash_sfa_decode_fm, flash_attention,
+    sfa_attention_op,
+)
+from repro.kernels import ref as REF
+
+
+# --------------------------------------------------------------------------
+# rtopk
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,k", [
+    ((8, 64), 8), ((3, 5, 128), 16), ((300, 256), 32), ((16, 16), 16),
+])
+def test_rtopk_matches_oracle(rng, shape, k):
+    x = jax.random.normal(rng, shape)
+    v1, i1 = rtopk(x, k, block_rows=128)
+    v2, i2 = REF.rtopk_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_rtopk_adversarial_ties_and_range():
+    x = jnp.array([[1., 1., 1., 1., 2., -2., 0., 0.],
+                   [0.] * 8,
+                   [1e30, 1e-30, -1e30, 5., 5., -5., 1e-38, 2.],
+                   [-3., 3., -3., 3., -3., 3., -3., 3.]])
+    for k in (1, 2, 3, 5, 8):
+        v1, i1 = rtopk(x, k, block_rows=8)
+        v2, i2 = REF.rtopk_ref(x, k)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rtopk_dtypes(rng, dtype):
+    x = jax.random.normal(rng, (64, 128)).astype(dtype)
+    v1, i1 = rtopk(x, 8, block_rows=64)
+    v2, i2 = REF.rtopk_ref(x, 8)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(
+        np.asarray(v1, np.float32), np.asarray(v2, np.float32))
+
+
+# --------------------------------------------------------------------------
+# flash_sfa (prefill)
+# --------------------------------------------------------------------------
+
+def _codes(rng, bh, n, d, k, dv, dtype=jnp.float32):
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (bh, n, d), dtype)
+    kk = jax.random.normal(jax.random.fold_in(rng, 2), (bh, n, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (bh, n, dv), dtype)
+    qv, qi = REF.rtopk_ref(q, k)
+    kv_, ki = REF.rtopk_ref(kk, k)
+    return qv, qi, kv_, ki, v
+
+
+@pytest.mark.parametrize("bh,n,d,k,dv,bq,bk,causal", [
+    (2, 256, 64, 8, 64, 128, 128, True),
+    (2, 256, 64, 8, 64, 128, 128, False),
+    (1, 300, 128, 16, 128, 128, 128, True),     # ragged / padded
+    (1, 300, 128, 16, 128, 64, 128, False),
+    (3, 128, 32, 4, 64, 32, 64, True),
+])
+def test_flash_sfa_matches_oracle(rng, bh, n, d, k, dv, bq, bk, causal):
+    qv, qi, kv_, ki, v = _codes(rng, bh, n, d, k, dv)
+    o1 = flash_sfa(qv, qi, kv_, ki, v, d=d, causal=causal,
+                   block_q=bq, block_k=bk)
+    o2 = REF.flash_sfa_ref(qv, qi, kv_, ki, v, d=d, causal=causal)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_sfa_bf16(rng):
+    qv, qi, kv_, ki, v = _codes(rng, 2, 256, 64, 8, 64, jnp.bfloat16)
+    o1 = flash_sfa(qv, qi, kv_, ki, v, d=64)
+    o2 = REF.flash_sfa_ref(qv, qi, kv_, ki, v, d=64)
+    err = np.max(np.abs(np.asarray(o1, np.float32) - np.asarray(o2, np.float32)))
+    assert err < 0.05
+
+
+# --------------------------------------------------------------------------
+# decode kernels
+# --------------------------------------------------------------------------
+
+def test_flash_sfa_decode_layouts_agree(rng):
+    bh, nmax, d, k, dv = 4, 384, 64, 8, 64
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (bh, d))
+    kraw = jax.random.normal(jax.random.fold_in(rng, 2), (bh, nmax, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (bh, nmax, dv))
+    kv_, ki = REF.rtopk_ref(kraw, k)
+    lengths = jnp.array([384, 200, 129, 1], jnp.int32)
+
+    o1 = flash_sfa_decode(q, kv_, ki, v, lengths, d=d)
+    o2 = REF.flash_sfa_decode_ref(q, kv_, ki, v, lengths, d=d)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+    qv, qi = REF.rtopk_ref(q, k)
+    kfeat = jnp.swapaxes(densify(SparseCode(kv_, ki, d)), -1, -2)
+    o3 = flash_sfa_decode_fm(qv, qi, kfeat, v, lengths)
+    o4 = REF.flash_sfa_decode_featmajor_ref(qv, qi, kfeat, v, lengths)
+    np.testing.assert_allclose(np.asarray(o3), np.asarray(o4), atol=2e-5)
+
+    # cross-layout: fm(sparse q) == token-major(densified sparse q)
+    o5 = flash_sfa_decode(densify(SparseCode(qv, qi, d)), kv_, ki, v,
+                          lengths, d=d)
+    np.testing.assert_allclose(np.asarray(o3), np.asarray(o5), atol=2e-5)
+
+
+@pytest.mark.parametrize("n", [100, 128, 257])
+def test_flash_sfa_decode_padding(rng, n):
+    bh, d, k, dv = 2, 64, 8, 64
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (bh, d))
+    kraw = jax.random.normal(jax.random.fold_in(rng, 2), (bh, n, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (bh, n, dv))
+    kv_, ki = REF.rtopk_ref(kraw, k)
+    lengths = jnp.array([n, max(1, n // 2)], jnp.int32)
+    o1 = flash_sfa_decode(q, kv_, ki, v, lengths, d=d, block_n=128)
+    o2 = REF.flash_sfa_decode_ref(q, kv_, ki, v, lengths, d=d)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# dense flash baseline + fused op
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_dense(rng, causal):
+    bh, n, d = 3, 256, 64
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (bh, n, d))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (bh, n, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (bh, n, d))
+    o1 = flash_attention(q, k, v, causal=causal)
+    o2 = REF.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_sfa_op_pallas_vs_xla_and_grads(rng):
+    B, N, H, D = 2, 256, 4, 64
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (B, N, H, D))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (B, N, H, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (B, N, H, D))
+    o1 = sfa_attention_op(q, k, v, sfa_k=8, impl="pallas")
+    o2 = sfa_attention_op(q, k, v, sfa_k=8, impl="xla")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
+    g1 = jax.grad(lambda q: (sfa_attention_op(q, k, v, sfa_k=8,
+                                              impl="pallas") ** 2).sum())(q)
+    g2 = jax.grad(lambda q: (sfa_attention_op(q, k, v, sfa_k=8,
+                                              impl="xla") ** 2).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=2e-3)

@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify, densify, topk_mask, topk_st, memory_ratio
+from repro.core.sparse import SparseCode, to_feature_major
+from repro.serve.kv_cache import memory_ratio_appendix_j, sparse_k_bytes, \
+    dense_k_bytes
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def row_matrix(draw):
+    rows = draw(st.integers(1, 8))
+    d = draw(st.sampled_from([8, 16, 32, 64, 128]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    x = np.array(jax.random.normal(jax.random.PRNGKey(seed), (rows, d)), copy=True)
+    # inject ties/zeros sometimes
+    if draw(st.booleans()):
+        x[:, :: max(1, d // 4)] = draw(st.sampled_from([0.0, 1.0, -1.0]))
+    return jnp.asarray(x)
+
+
+@given(row_matrix(), st.integers(1, 16))
+def test_topk_mask_selects_exactly_k(x, k):
+    k = min(k, x.shape[-1])
+    m = topk_mask(x, k)
+    counts = np.asarray(m.sum(-1))
+    assert (counts == k).all()
+
+
+@given(row_matrix(), st.integers(1, 16))
+def test_topk_mask_keeps_largest_magnitudes(x, k):
+    k = min(k, x.shape[-1])
+    m = np.asarray(topk_mask(x, k))
+    ax = np.abs(np.asarray(x, np.float32))
+    for r in range(x.shape[0]):
+        kept_min = ax[r][m[r]].min()
+        dropped = ax[r][~m[r]]
+        if dropped.size:
+            assert kept_min >= dropped.max() - 1e-7
+
+
+@given(row_matrix(), st.integers(1, 16))
+def test_sparsify_densify_idempotent(x, k):
+    k = min(k, x.shape[-1])
+    code = sparsify(x, k)
+    xd = densify(code)
+    code2 = sparsify(xd, k)
+    np.testing.assert_array_equal(np.asarray(densify(code2)), np.asarray(xd))
+    # support sizes and index validity
+    idx = np.asarray(code.indices)
+    assert ((idx >= 0) & (idx < x.shape[-1])).all()
+    assert (np.diff(idx, axis=-1) > 0).all()
+
+
+@given(row_matrix(), st.integers(1, 16))
+def test_straight_through_value_equality(x, k):
+    """Forward of topk_st == densify(sparsify) exactly (paper Eqs. 3-6)."""
+    k = min(k, x.shape[-1])
+    np.testing.assert_array_equal(np.asarray(topk_st(x, k)),
+                                  np.asarray(densify(sparsify(x, k))))
+
+
+@given(row_matrix(), st.integers(1, 8))
+def test_feature_major_transpose_roundtrip(x, k):
+    k = min(k, x.shape[-1])
+    code = sparsify(x, k)
+    fm = to_feature_major(code)                      # (d, n)
+    np.testing.assert_array_equal(np.asarray(fm.T), np.asarray(densify(code)))
+
+
+@given(st.sampled_from([32, 64, 128, 256, 1024]), st.integers(1, 64))
+def test_memory_ratio_monotone_and_positive(d, k):
+    """Appendix J: ratio 2d/(3k+4); monotone in d, anti-monotone in k; the
+    byte-accounting function agrees with the closed form."""
+    k = min(k, d)
+    r = memory_ratio_appendix_j(d, k)
+    assert r > 0
+    assert memory_ratio_appendix_j(2 * d, k) > r
+    if k > 1:
+        assert memory_ratio_appendix_j(d, k - 1) > r
+    n = 1000
+    approx = dense_k_bytes(n, d) / sparse_k_bytes(n, k, d)
+    # same formula modulo the +4 ptr rounding (paper's own approximation)
+    assert abs(approx - r) / r < 0.25
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_sfa_attention_rowstochastic(seed, k):
+    """Softmax rows still sum to 1 under feature sparsification (SFA keeps
+    exact softmax semantics — paper §3)."""
+    rng = jax.random.PRNGKey(seed)
+    B, N, H, D = 1, 12, 1, 16
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (B, N, H, D))
+    kk = jax.random.normal(jax.random.fold_in(rng, 2), (B, N, H, D))
+    v = jnp.ones((B, N, H, D))
+    from repro.core import sfa_attention
+    o = sfa_attention(q, kk, v, sfa_k=min(k, D), materialize=True)
+    np.testing.assert_allclose(np.asarray(o), 1.0, atol=1e-4)

@@ -1,0 +1,100 @@
+"""Core SFA math: Top-k codes, straight-through, score equivalence (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    sparsify, densify, topk_mask, topk_st, intersect_score, memory_ratio,
+    dense_attention_ref, chunked_attention, sfa_attention, decode_attention,
+)
+from repro.core.sparse import SparseCode
+
+
+def test_topk_mask_matches_lax_topk(rng):
+    for shape, k in [((64, 128), 16), ((3, 5, 32), 4), ((7, 8), 8), ((2, 16), 1)]:
+        x = jax.random.normal(rng, shape)
+        m = topk_mask(x, k)
+        _, idx = jax.lax.top_k(jnp.abs(x).astype(jnp.float32), k)
+        ref = jnp.zeros(shape, bool)
+        ref = jnp.put_along_axis(ref, idx, True, axis=-1, inplace=False)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(ref))
+
+
+def test_topk_mask_tie_break_lowest_index():
+    x = jnp.array([[1.0, 1.0, 1.0, 2.0, -2.0, 0.0]])
+    np.testing.assert_array_equal(
+        np.asarray(topk_mask(x, 3)),
+        [[True, False, False, True, True, False]])
+
+
+def test_sparsify_roundtrip_equals_straight_through(rng):
+    x = jax.random.normal(rng, (6, 32))
+    code = sparsify(x, 8)
+    np.testing.assert_allclose(np.asarray(densify(code)),
+                               np.asarray(topk_st(x, 8)), atol=0)
+    # ascending indices, unique
+    idx = np.asarray(code.indices)
+    assert (np.diff(idx, axis=-1) > 0).all()
+
+
+def test_straight_through_gradient_support(rng):
+    """Paper Eq. 6: gradients flow only through selected coordinates."""
+    x = jax.random.normal(rng, (4, 16))
+    g = jax.grad(lambda x: (topk_st(x, 4) ** 2).sum())(x)
+    mask = np.asarray(topk_mask(x, 4))
+    assert ((np.asarray(g) != 0) == mask).all()
+
+
+def test_intersect_score_equals_densified_matmul(rng):
+    """Paper Eq. 5: support-intersection scoring == sparse-code matmul."""
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (6, 16))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (8, 16))
+    qc, kc = sparsify(q, 4), sparsify(k, 4)
+    s1 = intersect_score(qc, kc, 0.25)
+    s2 = densify(qc) @ densify(kc).T * 0.25
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 7])
+def test_chunked_attention_matches_dense(rng, causal, window):
+    B, N, H, D = 2, 50, 3, 16
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (B, N, H, D))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (B, N, H, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (B, N, H, D))
+    o1 = dense_attention_ref(q, k, v, causal=causal, window=window)
+    o2 = chunked_attention(q, k, v, causal=causal, window=window, chunk_size=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_sfa_attention_exactness(rng):
+    """SFA == dense attention on Topk'd inputs (the paper's exactness claim)."""
+    B, N, H, D = 2, 40, 2, 32
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (B, N, H, D))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (B, N, H, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (B, N, H, D))
+    o1 = sfa_attention(q, k, v, sfa_k=8, materialize=True)
+    o2 = sfa_attention(q, k, v, sfa_k=8, chunk_size=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    o3 = dense_attention_ref(topk_st(q, 8), topk_st(k, 8), v,
+                             scale=D ** -0.5)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=1e-5)
+
+
+def test_decode_matches_last_row(rng):
+    B, N, H, D = 2, 30, 2, 16
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (B, N, H, D))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (B, N, H, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (B, N, H, D))
+    kc = jnp.pad(k, ((0, 0), (0, 10), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, 10), (0, 0), (0, 0)))
+    od = decode_attention(q[:, N - 1:N], kc, vc, N)
+    of = dense_attention_ref(q, k, v, causal=True)[:, N - 1:N]
+    np.testing.assert_allclose(np.asarray(od), np.asarray(of), atol=1e-5)
+
+
+def test_memory_ratio_formula():
+    """Appendix J Eq. 16: ratio ≈ 2d/(3k+4)."""
+    assert abs(memory_ratio(128, 16) - 2 * 128 / (3 * 16 + 4)) < 1e-9
+    assert memory_ratio(128, 16) > 4.9       # ~5x smaller K storage
