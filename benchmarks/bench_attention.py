@@ -1,5 +1,6 @@
 """Paper Figure 3/4 + Table 9: attention latency, dense vs SFA, sweeping
-(k, d, n).
+(k, d, n) — forward AND backward (the paper's 2.5× pretraining speedup
+needs both passes, §5; fwd+bwd is measured here, not asserted).
 
 CPU wall-clock of interpret-mode Pallas kernels is NOT representative of TPU
 latency, so each row reports BOTH the measured microseconds (relative trends
@@ -9,7 +10,10 @@ memory-bound regimes the paper targets (decode / long context):
     t_tpu ≈ max(flops / 197e12, bytes / 819e9)
 
 The derived column is the dense/SFA byte ratio — the paper's Table 9 speedup
-driver (their own Table 7 shows the GPU kernel is bandwidth-bound too).
+driver (their own Table 7 shows the GPU kernel is bandwidth-bound too). The
+backward byte model is in DESIGN.md §3: the bwd reads the same O(nk) codes
+plus dO/O/lse and writes dense dQ/dK/dV, so its byte ratio is lower than the
+forward's but still > 1 for k ≪ d.
 """
 from __future__ import annotations
 
@@ -19,26 +23,43 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ref import rtopk_ref
-from repro.kernels import flash_sfa, flash_attention
+from repro.kernels import (flash_sfa, flash_sfa_bwd, flash_attention,
+                           flash_attention_bwd)
 from repro.utils.roofline import PEAK_FLOPS, HBM_BW
 
 
 def _time(fn, *args, iters=3):
-    fn(*args).block_until_ready()
+    out = fn(*args)
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
-    out.block_until_ready()
+    jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6      # us
 
 
 def sfa_bytes(n: int, d: int, k: int, dv: int) -> float:
-    """Per-(bh) HBM bytes: sparse Q/K codes + dense V + output."""
+    """Per-(bh) fwd HBM bytes: sparse Q/K codes + dense V + output."""
     return n * k * (2 + 2) * 2 + n * dv * 2 * 2           # vals+idx(q,k) + v,o
 
 
 def dense_bytes(n: int, d: int, dv: int) -> float:
     return n * d * 2 * 2 + n * dv * 2 * 2
+
+
+def sfa_bwd_bytes(n: int, d: int, k: int, dv: int) -> float:
+    """Per-(bh) bwd HBM bytes (DESIGN.md §3): codes ×2 passes + dO/O/V/lse
+    reads + dense dQ/dK/dV writes (ST grads land on k coords but are emitted
+    in dense layout)."""
+    reads = 2 * n * k * (2 + 2) * 2 + 3 * n * dv * 2 + 2 * n * 4
+    writes = 2 * n * d * 2 + n * dv * 2
+    return reads + writes
+
+
+def dense_bwd_bytes(n: int, d: int, dv: int) -> float:
+    reads = 2 * n * d * 2 * 2 + 3 * n * dv * 2 + 2 * n * 4
+    writes = 2 * n * d * 2 + n * dv * 2
+    return reads + writes
 
 
 def attn_flops(n: int, d: int, dv: int) -> float:
@@ -56,6 +77,7 @@ def run(quick: bool = True):
             q = jax.random.normal(rng, (bh, n, d), jnp.float32)
             kk = jax.random.normal(jax.random.fold_in(rng, 1), (bh, n, d))
             v = jax.random.normal(jax.random.fold_in(rng, 2), (bh, n, d))
+            g = jax.random.normal(jax.random.fold_in(rng, 3), (bh, n, d))
             qv, qi = rtopk_ref(q, k)
             kv_, ki = rtopk_ref(kk, k)
             t_sfa = _time(lambda *a: flash_sfa(*a, d=d, block_q=128,
@@ -72,4 +94,23 @@ def run(quick: bool = True):
             rows.append((f"attn_n{n}_d{d}_k{k}", t_sfa,
                          f"dense_us={t_dense:.0f};byte_ratio={br:.2f};"
                          f"tpu_model_speedup={tpu_dense / tpu_sfa:.2f}"))
+            # backward kernels (recompute-in-tile; residuals from the fwd)
+            o_sfa, lse_sfa = flash_sfa(qv, qi, kv_, ki, v, d=d,
+                                       return_residuals=True)
+            t_sfa_b = _time(lambda *a: flash_sfa_bwd(*a, d=d, block_q=128,
+                                                     block_k=128),
+                            qv, qi, kv_, ki, v, o_sfa, lse_sfa, g)
+            o_d, lse_d = flash_attention(q, kk, v, return_residuals=True)
+            t_dense_b = _time(
+                lambda *a: flash_attention_bwd(*a, block_q=128, block_k=128),
+                q, kk, v, o_d, lse_d, g)
+            bw_br = dense_bwd_bytes(n, d, d) / sfa_bwd_bytes(n, d, k, d)
+            bwd_flops = 2.5 * attn_flops(n, d, d)         # FA2: ~2.5× fwd
+            tpu_dense_b = max(bwd_flops / PEAK_FLOPS,
+                              dense_bwd_bytes(n, d, d) / HBM_BW) * 1e6
+            tpu_sfa_b = max(bwd_flops / PEAK_FLOPS,
+                            sfa_bwd_bytes(n, d, k, d) / HBM_BW) * 1e6
+            rows.append((f"attn_bwd_n{n}_d{d}_k{k}", t_sfa_b,
+                         f"dense_us={t_dense_b:.0f};byte_ratio={bw_br:.2f};"
+                         f"tpu_model_speedup={tpu_dense_b / tpu_sfa_b:.2f}"))
     return rows

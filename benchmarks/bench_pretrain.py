@@ -20,13 +20,13 @@ from repro.optim import OptimizerConfig, init_opt_state
 from repro.train.train_step import make_train_step, make_eval_step
 
 
-def _train(cfg, steps, dcfg, seed=0):
+def _train(cfg, steps, dcfg, seed=0, attn_impl=None):
     ocfg = OptimizerConfig(lr=3e-3, warmup_steps=max(steps // 20, 5),
                            total_steps=steps)
     params = model_init(jax.random.PRNGKey(seed), cfg)
     opt = init_opt_state(params)
-    step = jax.jit(make_train_step(cfg, ocfg))
-    evalf = jax.jit(make_eval_step(cfg))
+    step = jax.jit(make_train_step(cfg, ocfg, attn_impl=attn_impl))
+    evalf = jax.jit(make_eval_step(cfg, attn_impl=attn_impl))
     t0 = time.perf_counter()
     for s in range(steps):
         b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, s).items()}
@@ -66,4 +66,23 @@ def run(quick: bool = True):
     rows.append(("pretrain_parity", 0.0,
                  f"sfa_gap={gap_sfa:.4f};short_gap={gap_short:.4f};"
                  f"paper_ordering_holds={gap_sfa <= gap_short + 0.05}"))
+    # fwd+bwd step time through the Pallas kernels (interpret-mode on CPU:
+    # relative trends only; on TPU this is the paper's §5 speedup surface).
+    sfa_cfg = variants["sfa_k8"]
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=10)
+    params = model_init(jax.random.PRNGKey(0), sfa_cfg)
+    b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, 0).items()}
+    for impl in ("xla", "pallas"):
+        stepf = jax.jit(make_train_step(sfa_cfg, ocfg, attn_impl=impl))
+        opt = init_opt_state(params)
+        out = stepf(params, opt, b)          # compile
+        jax.block_until_ready(out)
+        iters = 2 if quick else 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = stepf(params, opt, b)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append((f"pretrain_step_sfa_{impl}", us,
+                     f"loss={float(out[2]['loss']):.4f}"))
     return rows

@@ -13,13 +13,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
                   scale: float, causal: bool, block_q: int, block_k: int,
-                  nk_real: int):
+                  nk_real: int, emit_lse: bool = False):
+    if emit_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        lse_ref, (m_ref, l_ref, acc_ref) = None, rest
     qb = pl.program_id(1)
     kb = pl.program_id(2)
     nkb = pl.num_programs(2)
@@ -63,14 +69,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l = l_ref[:, 0]
         o_ref[0, ...] = (acc_ref[...] /
                          jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        if emit_lse:
+            lse_ref[0, :] = m_ref[:, 0] + jnp.log(jnp.maximum(l, 1e-30))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "block_q", "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
-    """Dense flash attention. q/k/v: (bh, n, d) -> (bh, n, dv)."""
+    "causal", "scale", "block_q", "block_k", "interpret", "return_residuals"))
+def _flash_fwd(q, k, v, *, causal: bool = True, scale: float | None = None,
+               block_q: int = 128, block_k: int = 128, interpret: bool = True,
+               return_residuals: bool = False):
     bh, nq, d = q.shape
     nk = k.shape[1]
     dv = v.shape[-1]
@@ -83,24 +90,79 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
     grid = (bh, (nq + pad_q) // block_q, (nk + pad_k) // block_k)
+    out_specs = pl.BlockSpec((1, block_q, dv), lambda b, i, j: (b, i, 0))
+    out_shape = jax.ShapeDtypeStruct((bh, nq + pad_q, dv), v.dtype)
+    if return_residuals:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, block_q), lambda b, i, j: (b, i))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((bh, nq + pad_q), jnp.float32)]
     out = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
-                          block_q=block_q, block_k=block_k, nk_real=nk),
+                          block_q=block_q, block_k=block_k, nk_real=nk,
+                          emit_lse=return_residuals),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, block_k, dv), lambda b, i, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, dv), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, nq + pad_q, dv), v.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q, LANES), jnp.float32),
             pltpu.VMEM((block_q, LANES), jnp.float32),
             pltpu.VMEM((block_q, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    if return_residuals:
+        o, lse = out
+        return o[:, :nq], lse[:, :nq]
     return out[:, :nq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_diff(q, k, v, causal, scale, block_q, block_k, interpret):
+    return _flash_fwd(q, k, v, causal=causal, scale=scale, block_q=block_q,
+                      block_k=block_k, interpret=interpret)
+
+
+def _flash_diff_fwd(q, k, v, causal, scale, block_q, block_k, interpret):
+    o, lse = _flash_fwd(q, k, v, causal=causal, scale=scale, block_q=block_q,
+                        block_k=block_k, interpret=interpret,
+                        return_residuals=True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_diff_bwd(causal, scale, block_q, block_k, interpret, res, g):
+    # deferred import: flash_sfa_bwd shares tile helpers with flash_sfa
+    from repro.kernels.flash_sfa_bwd import flash_attention_bwd
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, g, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=interpret)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True, return_residuals: bool = False):
+    """Dense flash attention. q/k/v: (bh, n, d) -> (bh, n, dv).
+
+    Differentiable: ``jax.grad`` executes the Pallas backward kernels in
+    kernels/flash_sfa_bwd.py (recompute-in-tile, FA2-style) — no XLA forward
+    re-execution. ``return_residuals`` additionally returns the per-row
+    log-sum-exp (same contract as flash_sfa; that path is forward-only).
+    """
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if return_residuals:
+        return _flash_fwd(q, k, v, causal=causal, scale=scale,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret, return_residuals=True)
+    return _flash_diff(q, k, v, causal, scale, block_q, block_k, interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -38,8 +40,13 @@ def _densify_block(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:
 
 
 def _flash_sfa_kernel(qv_ref, qi_ref, kv_ref, ki_ref, v_ref, o_ref,
-                      m_ref, l_ref, acc_ref, *, d: int, scale: float,
-                      causal: bool, block_q: int, block_k: int, nk_real: int):
+                      *rest, d: int, scale: float,
+                      causal: bool, block_q: int, block_k: int, nk_real: int,
+                      emit_lse: bool = False):
+    if emit_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        lse_ref, (m_ref, l_ref, acc_ref) = None, rest
     qb = pl.program_id(1)
     kb = pl.program_id(2)
     nkb = pl.num_programs(2)
@@ -89,17 +96,25 @@ def _flash_sfa_kernel(qv_ref, qi_ref, kv_ref, ki_ref, v_ref, o_ref,
         l = l_ref[:, 0]
         o_ref[0, ...] = (acc_ref[...] /
                          jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        if emit_lse:
+            lse_ref[0, :] = m_ref[:, 0] + jnp.log(jnp.maximum(l, 1e-30))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "d", "causal", "scale", "block_q", "block_k", "interpret"))
+    "d", "causal", "scale", "block_q", "block_k", "interpret",
+    "return_residuals"))
 def flash_sfa(q_vals, q_idx, k_vals, k_idx, v, *, d: int, causal: bool = True,
               scale: float | None = None, block_q: int = 128,
-              block_k: int = 128, interpret: bool = True):
+              block_k: int = 128, interpret: bool = True,
+              return_residuals: bool = False):
     """FlashSFA forward. Codes: (bh, n, k); v: (bh, n, dv) -> (bh, n, dv).
 
     Exactly softmax(densify(Q̃)·densify(K̃)ᵀ·scale + causal)·V, computed in
     (block_q × block_k) tiles with online softmax; no (n, n) materialization.
+
+    With ``return_residuals`` also emits the per-row log-sum-exp
+    ``lse = m + log(l)`` (bh, n) f32 — the statistic the backward kernel
+    (flash_sfa_bwd.py) needs to recompute normalized P per tile.
     """
     bh, nq, kq = q_vals.shape
     nk = k_vals.shape[1]
@@ -117,9 +132,17 @@ def flash_sfa(q_vals, q_idx, k_vals, k_idx, v, *, d: int, causal: bool = True,
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
 
     grid = (bh, (nq + pad_q) // block_q, (nk + pad_k) // block_k)
+    out_specs = pl.BlockSpec((1, block_q, dv), lambda b, q, k: (b, q, 0))
+    out_shape = jax.ShapeDtypeStruct((bh, nq + pad_q, dv), v.dtype)
+    if return_residuals:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, block_q), lambda b, q, k: (b, q))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((bh, nq + pad_q), jnp.float32)]
     out = pl.pallas_call(
         functools.partial(_flash_sfa_kernel, d=d, scale=scale, causal=causal,
-                          block_q=block_q, block_k=block_k, nk_real=nk),
+                          block_q=block_q, block_k=block_k, nk_real=nk,
+                          emit_lse=return_residuals),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, kq), lambda b, q, k: (b, q, 0)),
@@ -128,15 +151,18 @@ def flash_sfa(q_vals, q_idx, k_vals, k_idx, v, *, d: int, causal: bool = True,
             pl.BlockSpec((1, block_k, k_idx.shape[-1]), lambda b, q, k: (b, k, 0)),
             pl.BlockSpec((1, block_k, dv), lambda b, q, k: (b, k, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, dv), lambda b, q, k: (b, q, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, nq + pad_q, dv), v.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q, LANES), jnp.float32),
             pltpu.VMEM((block_q, LANES), jnp.float32),
             pltpu.VMEM((block_q, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_vals, q_idx, k_vals, k_idx, v)
+    if return_residuals:
+        o, lse = out
+        return o[:, :nq], lse[:, :nq]
     return out[:, :nq]

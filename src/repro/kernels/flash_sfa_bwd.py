@@ -1,0 +1,266 @@
+"""FlashSFA-TPU backward: recompute-in-tile gradients for the sparse codes.
+
+FlashAttention-2-style backward, adapted to the paper's sparse feature codes
+(DESIGN.md §3). The forward saves only O and the per-row log-sum-exp
+LSE = m + log(l); the backward re-densifies the Q̃/K̃ code tiles in VMEM with
+the same iota-compare idiom as the forward, recomputes per-tile normalized
+probabilities P = exp(S − LSE) from the saved statistics — never
+materializing the (n, n) score matrix — and accumulates
+
+    dV_j  = Σ_i P_ijᵀ dO_i
+    dS_ij = P_ij (dP_ij − D_i) · scale,  dP = dO Vᵀ,  D_i = Σ(dO_i ∘ O_i)
+    dQ_i  = Σ_j dS_ij K̃_j,   dK_j = Σ_i dS_ijᵀ Q̃_i
+
+in VMEM scratch across the sequential grid axis. dQ/dK are masked in-kernel
+to the k stored coordinates of each row's code (scatter-free: the support
+mask is rebuilt from the indices, so gradients land exactly on the paper's
+Eq. 6 straight-through support — no XLA scatter, no dense-gradient fallback).
+
+Two kernels, as in the standard TPU flash backward: a dQ kernel whose grid
+parallelizes over q blocks and scans kv blocks, and a dK/dV kernel whose grid
+parallelizes over kv blocks and scans q blocks — each output block is owned
+by exactly one program, so no cross-program accumulation is needed.
+
+Both kernels are parametrized by ``sparse``: the dense-baseline variant
+(``flash_attention_bwd``, used by the custom_vjp in flash_attention.py so
+the paper's Dense_* rows are also measured fwd+bwd) is identity-densify with
+no support mask — same tile/grid bookkeeping, one code path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+from repro.kernels.flash_sfa import _densify_block
+
+NEG_INF = -1e30
+
+
+def _support_mask(idx: jax.Array, d: int) -> jax.Array:
+    """(b, k) int32 indices -> (b, d) {0,1} support mask (k VPU passes)."""
+    b, k = idx.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, d), 1)
+    m = jnp.zeros((b, d), jnp.float32)
+    for t in range(k):
+        m = jnp.maximum(m, (iota == idx[:, t][:, None]).astype(jnp.float32))
+    return m
+
+
+def _tile_p_ds(qd, kd, do, vb, lse, delta, *, scale, rows, cols, nk_real,
+               causal):
+    """Shared backward tile math: normalized P and dS for one (bq, bk) tile."""
+    s = jax.lax.dot_general(qd, kd, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = cols < nk_real
+    if causal:
+        ok &= cols <= rows
+    s = jnp.where(ok, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    p = jnp.where(ok, p, 0.0)
+    dp = jax.lax.dot_general(do, vb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (bq, bk)
+    ds = p * (dp - delta[:, None]) * scale
+    return p, ds
+
+
+def _unpack(refs, d, sparse):
+    """Split kernel refs into (load_q, load_k, q_mask_fn, k_mask_fn, rest).
+
+    sparse: refs = (qv, qi, kv, ki, *rest) — densify in VMEM (lazily, only
+    for live tiles), mask grads to the stored support.
+    dense: refs = (q, k, *rest) — identity load, no mask.
+    """
+    if sparse:
+        qv_ref, qi_ref, kv_ref, ki_ref, *rest = refs
+        load_q = lambda: _densify_block(qv_ref[0], qi_ref[0], d)
+        load_k = lambda: _densify_block(kv_ref[0], ki_ref[0], d)
+        q_mask = lambda x: x * _support_mask(qi_ref[0], d)
+        k_mask = lambda x: x * _support_mask(ki_ref[0], d)
+    else:
+        q_ref, k_ref, *rest = refs
+        load_q = lambda: q_ref[0].astype(jnp.float32)
+        load_k = lambda: k_ref[0].astype(jnp.float32)
+        q_mask = k_mask = lambda x: x
+    return load_q, load_k, q_mask, k_mask, rest
+
+
+def _bwd_dq_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
+                   block_k: int, nk_real: int, sparse: bool):
+    qb, kb = pl.program_id(1), pl.program_id(2)
+    nkb = pl.num_programs(2)
+    load_q, load_k, q_mask, _, rest = _unpack(refs, d, sparse)
+    v_ref, do_ref, lse_ref, delta_ref, dq_ref, dq_acc = rest
+
+    @pl.when(kb == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_start = qb * block_q
+    k_start = kb * block_k
+    live = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _compute():
+        qd, kd = load_q(), load_k()
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        _, ds = _tile_p_ds(qd, kd, do_ref[0].astype(jnp.float32),
+                           v_ref[0].astype(jnp.float32), lse_ref[0],
+                           delta_ref[0], scale=scale, rows=rows, cols=cols,
+                           nk_real=nk_real, causal=causal)
+        dq_acc[...] += jax.lax.dot_general(
+            ds, kd, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        # Scatter-free straight-through: grads only on the stored coords.
+        dq_ref[0, ...] = q_mask(dq_acc[...]).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
+                    block_k: int, nk_real: int, sparse: bool):
+    kb, qb = pl.program_id(1), pl.program_id(2)
+    nqb = pl.num_programs(2)
+    load_q, load_k, _, k_mask, rest = _unpack(refs, d, sparse)
+    v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc = rest
+
+    @pl.when(qb == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = qb * block_q
+    k_start = kb * block_k
+    live = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _compute():
+        qd, kd = load_q(), load_k()
+        do = do_ref[0].astype(jnp.float32)
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        p, ds = _tile_p_ds(qd, kd, do, v_ref[0].astype(jnp.float32),
+                           lse_ref[0], delta_ref[0], scale=scale, rows=rows,
+                           cols=cols, nk_real=nk_real, causal=causal)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                    # (bk, dv)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, qd, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                    # (bk, d)
+
+    @pl.when(qb == nqb - 1)
+    def _finalize():
+        dk_ref[0, ...] = k_mask(dk_acc[...]).astype(dk_ref.dtype)
+        dv_ref[0, ...] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
+              block_k, interpret, sparse):
+    """Shared scaffolding for both backwards.
+
+    q_ops/k_ops: (vals, idx) code pairs when sparse, (dense,) when not —
+    per-side operand lists whose BlockSpecs follow the q/k tiling.
+    """
+    nq = q_ops[0].shape[1]
+    nk = k_ops[0].shape[1]
+    bh = v.shape[0]
+    dv_dim = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    delta = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    pad_q = (-nq) % block_q
+    pad_k = (-nk) % block_k
+    if pad_q:
+        q_ops = [jnp.pad(x, ((0, 0), (0, pad_q), (0, 0))) for x in q_ops]
+        g = jnp.pad(g, ((0, 0), (0, pad_q), (0, 0)))
+        lse = jnp.pad(lse, ((0, 0), (0, pad_q)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad_q)))
+    if pad_k:
+        k_ops = [jnp.pad(x, ((0, 0), (0, pad_k), (0, 0))) for x in k_ops]
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nqp, nkp = nq + pad_q, nk + pad_k
+
+    def specs(qmap, kmap):
+        """Input BlockSpecs in kernel order for the given q/k index maps."""
+        return ([pl.BlockSpec((1, block_q, x.shape[-1]), qmap)
+                 for x in q_ops] +
+                [pl.BlockSpec((1, block_k, x.shape[-1]), kmap)
+                 for x in k_ops] +
+                [pl.BlockSpec((1, block_k, dv_dim), kmap),      # v
+                 pl.BlockSpec((1, block_q, dv_dim), qmap),      # do
+                 pl.BlockSpec((1, block_q), lambda *a: qmap(*a)[:2]),  # lse
+                 pl.BlockSpec((1, block_q), lambda *a: qmap(*a)[:2])])  # delta
+
+    kw = dict(d=d, scale=scale, causal=causal, block_q=block_q,
+              block_k=block_k, nk_real=nk, sparse=sparse)
+    cparams = CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    operands = (*q_ops, *k_ops, v, g, lse, delta)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **kw),
+        grid=(bh, nqp // block_q, nkp // block_k),
+        in_specs=specs(lambda b, i, j: (b, i, 0), lambda b, i, j: (b, j, 0)),
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nqp, d), q_ops[0].dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        compiler_params=cparams, interpret=interpret,
+    )(*operands)
+
+    dk, dvout = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **kw),
+        grid=(bh, nkp // block_k, nqp // block_q),
+        in_specs=specs(lambda b, j, i: (b, i, 0), lambda b, j, i: (b, j, 0)),
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dv_dim), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nkp, d), k_ops[0].dtype),
+            jax.ShapeDtypeStruct((bh, nkp, dv_dim), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, dv_dim), jnp.float32),
+        ],
+        compiler_params=cparams, interpret=interpret,
+    )(*operands)
+    return dq[:, :nq], dk[:, :nk], dvout[:, :nk]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d", "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_sfa_bwd(q_vals, q_idx, k_vals, k_idx, v, o, lse, g, *, d: int,
+                  causal: bool = True, scale: float | None = None,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = True):
+    """FlashSFA backward. Codes: (bh, n, k); v/o/g: (bh, n, dv); lse: (bh, n).
+
+    Returns (dq, dk, dv): dq/dk are dense (bh, n, d) gradients supported only
+    on each row's k stored coordinates (paper Eq. 6 straight-through — i.e.
+    the gradient w.r.t. the pre-Topk dense Q/K), dv is dense (bh, n, dv).
+    """
+    return _bwd_impl([q_vals, q_idx], [k_vals, k_idx], v, o, lse, g, d=d,
+                     causal=causal, scale=scale, block_q=block_q,
+                     block_k=block_k, interpret=interpret, sparse=True)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_bwd(q, k, v, o, lse, g, *, causal: bool = True,
+                        scale: float | None = None, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = True):
+    """Dense FlashAttention backward. q/k/v/o/g: (bh, n, d); lse: (bh, n)."""
+    return _bwd_impl([q], [k], v, o, lse, g, d=q.shape[-1], causal=causal,
+                     scale=scale, block_q=block_q, block_k=block_k,
+                     interpret=interpret, sparse=False)

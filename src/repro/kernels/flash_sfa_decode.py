@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -125,7 +127,7 @@ def flash_sfa_decode(q, k_vals, k_idx, v, lengths, *, d: int,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((bh, dv), v.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(lengths, jnp.int32), q, k_vals, k_idx, v)
@@ -226,7 +228,7 @@ def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((bh, dv), v.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(q_idx, jnp.int32), jnp.asarray(lengths, jnp.int32),

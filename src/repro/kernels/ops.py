@@ -7,9 +7,16 @@ on (batch, seq, heads, head_dim) activations, matching the signature of
   * ``"xla"``     — pure-JAX chunked online-softmax (always available; what
                     the pjit/dry-run path lowers; differentiable).
   * ``"pallas"``  — Pallas kernels, ``interpret=True`` on CPU (correctness)
-                    or compiled on a real TPU. Forward-only: the backward
-                    pass falls back to XLA via ``jax.custom_vjp`` so training
-                    with impl='pallas' still works end-to-end.
+                    or compiled on a real TPU. Differentiable end-to-end:
+                    the backward is the FlashSFA backward kernel
+                    (kernels/flash_sfa_bwd.py) — per-tile score recompute
+                    from the saved (O, lse) residuals, straight-through
+                    gradients on the stored top-k coordinates (paper Eq. 6).
+
+``bwd_impl`` independently selects the backward for ``impl="pallas"``:
+``"pallas"`` (default, the kernel) or ``"xla"`` (full XLA re-execution of
+the forward via ``jax.vjp`` — kept as the gradient oracle for parity tests
+and as a fallback on backends without a Pallas lowering).
 """
 from __future__ import annotations
 
@@ -19,9 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as att
-from repro.core.sparse import topk_st
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_sfa import flash_sfa
+from repro.kernels.flash_sfa_bwd import flash_sfa_bwd
 from repro.kernels.rtopk import rtopk
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -37,49 +44,85 @@ def _unfold_heads(x, b, h):
     return jnp.einsum("bhnd->bnhd", x.reshape(b, h, n, d))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _sfa_pallas(q, k, v, sfa_k, causal, scale):
+def _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale, return_residuals=False):
+    """Shared primal body: fold -> rtopk -> flash_sfa (-> residuals)."""
     b, n, h, d = q.shape
     qf, kf, vf = _fold_heads(q), _fold_heads(k), _fold_heads(v)
     qv, qi = rtopk(qf, sfa_k, interpret=not _ON_TPU)
     kv_, ki = rtopk(kf, sfa_k, interpret=not _ON_TPU)
-    out = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
-                    interpret=not _ON_TPU)
-    return _unfold_heads(out, b, h)
+    if not return_residuals:
+        out = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
+                        interpret=not _ON_TPU)
+        return _unfold_heads(out, b, h)
+    out, lse = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
+                         interpret=not _ON_TPU, return_residuals=True)
+    # The kernel backward needs only the codes + folded v + (out, lse); the
+    # dense q/k/v are NOT saved (shapes/dtypes are recoverable from g and
+    # the codes), keeping residual memory at the FA2 contract.
+    return _unfold_heads(out, b, h), (qv, qi, kv_, ki, vf, out, lse)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _sfa_pallas(q, k, v, sfa_k, causal, scale, bwd):
+    return _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale)
 
 
 def _sfa_xla(q, k, v, sfa_k, causal, scale):
     return att.sfa_attention(q, k, v, sfa_k=sfa_k, causal=causal, scale=scale)
 
 
-def _sfa_fwd(q, k, v, sfa_k, causal, scale):
-    return _sfa_pallas(q, k, v, sfa_k, causal, scale), (q, k, v)
+def _sfa_fwd(q, k, v, sfa_k, causal, scale, bwd):
+    if bwd == "xla":
+        return _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale), (q, k, v)
+    return _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale,
+                           return_residuals=True)
 
 
-def _sfa_bwd(sfa_k, causal, scale, res, g):
-    # Straight-through backward via the XLA path (paper Eq. 6 semantics).
-    q, k, v = res
-    _, vjp = jax.vjp(lambda q, k, v: _sfa_xla(q, k, v, sfa_k, causal, scale),
-                     q, k, v)
-    return vjp(g)
+def _sfa_bwd(sfa_k, causal, scale, bwd, res, g):
+    if bwd == "xla":
+        # Oracle/fallback: straight-through backward via full XLA
+        # re-execution of the forward (paper Eq. 6 semantics).
+        q, k, v = res
+        _, vjp = jax.vjp(lambda q, k, v: _sfa_xla(q, k, v, sfa_k, causal,
+                                                  scale), q, k, v)
+        return vjp(g)
+    qv, qi, kv_, ki, vf, out, lse = res
+    b, n, h, d = g.shape
+    gf = _fold_heads(g)
+    dqf, dkf, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf, d=d,
+                                  causal=causal, scale=scale,
+                                  interpret=not _ON_TPU)
+    return (_unfold_heads(dqf, b, h).astype(qv.dtype),
+            _unfold_heads(dkf, b, h).astype(kv_.dtype),
+            _unfold_heads(dvf, b, h).astype(vf.dtype))
 
 
 _sfa_pallas.defvjp(_sfa_fwd, _sfa_bwd)
 
 
+def _check_impl(name, value, allowed=("xla", "pallas")):
+    if value not in allowed:
+        raise ValueError(f"{name}={value!r}; expected one of {allowed}")
+
+
 def sfa_attention_op(q, k, v, *, sfa_k: int, causal: bool = True,
-                     scale: float | None = None, impl: str = "xla"):
+                     scale: float | None = None, impl: str = "xla",
+                     bwd_impl: str = "pallas"):
     """SFA attention on (b, n, h, d) activations. See module docstring."""
+    _check_impl("impl", impl)
+    _check_impl("bwd_impl", bwd_impl)
     d = q.shape[-1]
     scale = scale if scale is not None else d ** -0.5
     if impl == "pallas":
-        return _sfa_pallas(q, k, v, sfa_k, causal, scale)
+        return _sfa_pallas(q, k, v, sfa_k, causal, scale, bwd_impl)
     return _sfa_xla(q, k, v, sfa_k, causal, scale)
 
 
 def dense_attention_op(q, k, v, *, causal: bool = True,
                        scale: float | None = None, impl: str = "xla"):
-    """Dense attention on (b, n, h, d); pallas impl is forward-only."""
+    """Dense attention on (b, n, h, d); the pallas impl is differentiable via
+    the dense FlashAttention backward kernel (flash_sfa_bwd.py)."""
+    _check_impl("impl", impl)
     d = q.shape[-1]
     scale = scale if scale is not None else d ** -0.5
     if impl == "pallas":

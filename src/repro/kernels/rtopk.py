@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _cumsum_rows(x: jax.Array) -> jax.Array:
     """Inclusive prefix-sum along the last axis via triangular matmul.
@@ -108,7 +110,7 @@ def rtopk(x: jax.Array, k: int, *, block_rows: int = 256, interpret: bool = True
             jax.ShapeDtypeStruct((x2.shape[0], k), x.dtype),
             jax.ShapeDtypeStruct((x2.shape[0], k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x2)

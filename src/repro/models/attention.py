@@ -21,6 +21,7 @@ scoring plus densely for the value aggregation, and k_pe densely.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 from repro.configs.base import AttentionConfig, ModelConfig
 from repro.core.attention import chunked_attention, NEG_INF
 from repro.core.sparse import topk_st, sparsify, densify, SparseCode
+from repro.kernels.ops import sfa_attention_op, dense_attention_op
 from repro.distributed.sharding import axis_size, constrain
 from repro.models.layers import dense, dense_init, norm_init, apply_norm, rope
 
@@ -253,16 +255,41 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
         o = o.astype(dt).reshape(b, 1, h * hd)
         return AttentionOut(dense(params["w_o"], o, dt), cache)
 
-    # train / prefill: full-sequence attention (heads padded to TP degree)
-    qs = _sfa_st(q, a)
-    ks = _sfa_st(k, a)
-    qs, pad_h = _pad_heads(qs, h)
-    h_eff = h + pad_h
-    kr = _expand_kv(ks, h_eff)
-    vr = _expand_kv(v, h_eff)
-    qs, kr, vr = _constrain_qkv(qs, kr, vr, h_eff)
-    o = chunked_attention(qs, kr, vr, causal=a.causal, window=window,
-                          scale=scale, chunk_size=min(1024, max(n, 128)))
+    # train / prefill: full-sequence attention (heads padded to TP degree).
+    # impl="pallas" routes through the fused rtopk->FlashSFA kernels (fwd AND
+    # bwd — kernels/flash_sfa_bwd.py); windowed / rope-protected layers keep
+    # the XLA path (no Pallas lowering for those yet).
+    use_pallas = (a.impl == "pallas" and a.window is None and window is None
+                  and (a.sfa_k is None or a.sfa_rope_protect == 0))
+    if a.impl == "pallas" and not use_pallas:
+        # trace-time warning: fires once per compile, not per step
+        warnings.warn(
+            "impl='pallas' requested but this layer is windowed or "
+            "rope-protected (no Pallas lowering yet); falling back to the "
+            "XLA path — pallas-vs-xla comparisons on this config are void",
+            stacklevel=2)
+    if use_pallas:
+        qp, pad_h = _pad_heads(q, h)
+        h_eff = h + pad_h
+        kr = _expand_kv(k, h_eff)
+        vr = _expand_kv(v, h_eff)
+        qp, kr, vr = _constrain_qkv(qp, kr, vr, h_eff)
+        if a.sfa_k is not None:
+            o = sfa_attention_op(qp, kr, vr, sfa_k=a.sfa_k, causal=a.causal,
+                                 scale=scale, impl="pallas")
+        else:
+            o = dense_attention_op(qp, kr, vr, causal=a.causal, scale=scale,
+                                   impl="pallas")
+    else:
+        qs = _sfa_st(q, a)
+        ks = _sfa_st(k, a)
+        qs, pad_h = _pad_heads(qs, h)
+        h_eff = h + pad_h
+        kr = _expand_kv(ks, h_eff)
+        vr = _expand_kv(v, h_eff)
+        qs, kr, vr = _constrain_qkv(qs, kr, vr, h_eff)
+        o = chunked_attention(qs, kr, vr, causal=a.causal, window=window,
+                              scale=scale, chunk_size=min(1024, max(n, 128)))
     if pad_h:
         o = o[:, :, :h]
     distill = jnp.zeros((), jnp.float32)

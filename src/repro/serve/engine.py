@@ -10,6 +10,7 @@ slot batch — the shape the decode_32k/long_500k dry-run cells lower.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -18,6 +19,18 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_decode_caches, prefill
+
+
+@functools.lru_cache(maxsize=16)
+def _jitted_fns(cfg: ModelConfig):
+    """Compiled prefill/decode shared across engines with the same config —
+    spinning up a new engine (tests, multi-tenant serving) reuses the jit
+    cache instead of re-tracing the whole model. Bounded so a long-lived
+    process serving many distinct configs doesn't pin executables forever."""
+    pre = jax.jit(lambda p, batch: prefill(p, batch, cfg))
+    dec = jax.jit(lambda p, tok, caches, lens: decode_step(p, tok, caches,
+                                                           lens, cfg))
+    return pre, dec
 
 
 @dataclasses.dataclass
@@ -41,10 +54,7 @@ class DecodeEngine:
         self.outputs: list[list[int]] = [[] for _ in range(ecfg.max_slots)]
         self.budgets = np.zeros((ecfg.max_slots,), np.int64)
         self._rng = jax.random.PRNGKey(ecfg.seed)
-        self._decode = jax.jit(
-            lambda p, tok, caches, lens: decode_step(p, tok, caches, lens,
-                                                     cfg))
-        self._prefill = jax.jit(lambda p, batch: prefill(p, batch, cfg))
+        self._prefill, self._decode = _jitted_fns(cfg)
 
     # ------------------------------------------------------------------
     def _insert_cache(self, slot: int, one_caches, prompt_len: int):

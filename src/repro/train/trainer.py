@@ -26,6 +26,9 @@ class TrainerConfig:
     accum_steps: int = 1
     grad_compression: Optional[float] = None
     data_kind: str = "markov"
+    # None = use cfg.attention.impl; "pallas" = train fwd+bwd through the
+    # Pallas kernels; "xla" = force the pure-JAX path.
+    attn_impl: Optional[str] = None
     ft: FTConfig = dataclasses.field(default_factory=FTConfig)
 
 
@@ -43,7 +46,8 @@ class Trainer:
                           if tcfg.grad_compression else None)
         self.step_fn = jax.jit(make_train_step(
             cfg, opt_cfg, accum_steps=tcfg.accum_steps,
-            grad_compression=tcfg.grad_compression))
+            grad_compression=tcfg.grad_compression,
+            attn_impl=tcfg.attn_impl))
         self._batch_fn = (markov_batch if tcfg.data_kind == "markov"
                           else copy_batch)
 

@@ -33,7 +33,9 @@ def test_rtopk_adversarial_ties_and_range():
                    [0.] * 8,
                    [1e30, 1e-30, -1e30, 5., 5., -5., 1e-38, 2.],
                    [-3., 3., -3., 3., -3., 3., -3., 3.]])
-    for k in (1, 2, 3, 5, 8):
+    # each k is a fresh Pallas compile: 3 points (no-tie, mid-tie, full row)
+    # cover the tie-break branches without 5 compiles
+    for k in (1, 3, 8):
         v1, i1 = rtopk(x, k, block_rows=8)
         v2, i2 = REF.rtopk_ref(x, k)
         np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
@@ -143,7 +145,9 @@ def test_flash_attention_dense(rng, causal):
 
 
 def test_sfa_op_pallas_vs_xla_and_grads(rng):
-    B, N, H, D = 2, 256, 4, 64
+    # small integration check; exhaustive grad parity lives in
+    # tests/test_flash_sfa_bwd.py
+    B, N, H, D = 2, 128, 2, 64
     q = jax.random.normal(jax.random.fold_in(rng, 1), (B, N, H, D))
     k = jax.random.normal(jax.random.fold_in(rng, 2), (B, N, H, D))
     v = jax.random.normal(jax.random.fold_in(rng, 3), (B, N, H, D))

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+hypothesis is an optional test dependency (requirements-test.txt); the whole
+module skips cleanly when it isn't installed so ``pytest -x -q`` still runs
+the rest of the suite in a clean env.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import sparsify, densify, topk_mask, topk_st, memory_ratio
 from repro.core.sparse import SparseCode, to_feature_major
