@@ -22,9 +22,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse import SparseCode, to_feature_major
 from repro.kernels.ref import rtopk_ref
 from repro.kernels import (flash_sfa, flash_sfa_bwd, flash_attention,
                            flash_attention_bwd)
+from repro.kernels.flash_sfa_decode import (flash_sfa_decode,
+                                            flash_sfa_decode_fm)
 from repro.utils.roofline import PEAK_FLOPS, HBM_BW
 
 
@@ -64,6 +67,26 @@ def dense_bwd_bytes(n: int, d: int, dv: int) -> float:
 
 def attn_flops(n: int, d: int, dv: int) -> float:
     return 2 * n * n / 2 * (d + dv)                       # causal
+
+
+def decode_sparse_bytes(n: int, k: int, dv: int) -> float:
+    """Per-(bh) decode-step HBM bytes, sparse K cache: (val+uint8 idx)·k per
+    token + dense V + the O(1) query/output."""
+    return n * k * (2 + 1) + n * dv * 2
+
+
+def decode_dense_bytes(n: int, d: int, dv: int) -> float:
+    return n * d * 2 + n * dv * 2
+
+
+def _xla_gather_decode(q, kv, ki, v, lengths, scale):
+    """The serving oracle: O(nk) gathered K bytes, dense V aggregation."""
+    bh, n, k = kv.shape
+    qb = jnp.broadcast_to(q[:, None], (bh, n, q.shape[-1]))
+    s = (jnp.take_along_axis(qb, ki, -1) * kv).sum(-1) * scale
+    s = jnp.where(jnp.arange(n)[None, :] < lengths[:, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bn,bnd->bd", pr, v)
 
 
 def run(quick: bool = True):
@@ -113,4 +136,32 @@ def run(quick: bool = True):
             rows.append((f"attn_bwd_n{n}_d{d}_k{k}", t_sfa_b,
                          f"dense_us={t_dense_b:.0f};byte_ratio={bw_br:.2f};"
                          f"tpu_model_speedup={tpu_dense_b / tpu_sfa_b:.2f}"))
+    # serving decode backends (registry names): token-major flash_sfa_decode
+    # vs feature-major flash_sfa_decode_fm vs the XLA gather oracle, one
+    # query against an n-token sparse cache. CPU interpret-mode wall-clock
+    # is trend-only; the byte model is the paper's O(nk) decode-IO claim.
+    for n in ([512] if quick else [512, 2048]):
+        for d, k in ((64, 8), (128, 8)):
+            kk_ = jax.random.normal(jax.random.fold_in(rng, 4), (bh, n, d))
+            q1 = jax.random.normal(jax.random.fold_in(rng, 5), (bh, d))
+            v1 = jax.random.normal(jax.random.fold_in(rng, 6), (bh, n, d))
+            kv_, ki = rtopk_ref(kk_, k)
+            qv1, qi1 = rtopk_ref(q1, k)
+            q1s = jnp.zeros_like(q1).at[
+                jnp.arange(bh)[:, None], qi1].set(qv1)   # sparse q, dense layout
+            lens = jnp.full((bh,), n, jnp.int32)
+            scale = d ** -0.5
+            t_tok = _time(lambda *a: flash_sfa_decode(*a, d=d, scale=scale),
+                          q1s, kv_, ki, v1, lens)
+            kfeat = to_feature_major(SparseCode(values=kv_, indices=ki, dim=d))
+            t_fm = _time(lambda *a: flash_sfa_decode_fm(*a, scale=scale),
+                         qv1, qi1, kfeat, v1, lens)
+            t_xla = _time(jax.jit(_xla_gather_decode),
+                          q1s, kv_, ki, v1, lens, scale)
+            br = decode_dense_bytes(n, d, d) / decode_sparse_bytes(n, k, d)
+            rows.append((f"decode_n{n}_d{d}_k{k}", t_tok,
+                         f"fm_us={t_fm:.0f};xla_us={t_xla:.0f};"
+                         f"byte_ratio={br:.2f};"
+                         f"tpu_model_us="
+                         f"{decode_sparse_bytes(n, k, d) / HBM_BW * 1e6:.3f}"))
     return rows

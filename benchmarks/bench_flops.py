@@ -12,8 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention import chunked_attention, sfa_attention
-from repro.models.attention import _gather_score  # decode scoring primitive
+from repro.core.attention import chunked_attention
+from repro.models.backends import _gather_score  # decode scoring primitive
 from repro.serve.kv_cache import sparse_k_bytes, dense_k_bytes
 
 

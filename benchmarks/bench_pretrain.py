@@ -20,13 +20,13 @@ from repro.optim import OptimizerConfig, init_opt_state
 from repro.train.train_step import make_train_step, make_eval_step
 
 
-def _train(cfg, steps, dcfg, seed=0, attn_impl=None):
+def _train(cfg, steps, dcfg, seed=0, attn_backend=None):
     ocfg = OptimizerConfig(lr=3e-3, warmup_steps=max(steps // 20, 5),
                            total_steps=steps)
     params = model_init(jax.random.PRNGKey(seed), cfg)
     opt = init_opt_state(params)
-    step = jax.jit(make_train_step(cfg, ocfg, attn_impl=attn_impl))
-    evalf = jax.jit(make_eval_step(cfg, attn_impl=attn_impl))
+    step = jax.jit(make_train_step(cfg, ocfg, attn_backend=attn_backend))
+    evalf = jax.jit(make_eval_step(cfg, attn_backend=attn_backend))
     t0 = time.perf_counter()
     for s in range(steps):
         b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, s).items()}
@@ -72,8 +72,8 @@ def run(quick: bool = True):
     ocfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=10)
     params = model_init(jax.random.PRNGKey(0), sfa_cfg)
     b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, 0).items()}
-    for impl in ("xla", "pallas"):
-        stepf = jax.jit(make_train_step(sfa_cfg, ocfg, attn_impl=impl))
+    for backend in ("xla", "pallas"):
+        stepf = jax.jit(make_train_step(sfa_cfg, ocfg, attn_backend=backend))
         opt = init_opt_state(params)
         out = stepf(params, opt, b)          # compile
         jax.block_until_ready(out)
@@ -83,6 +83,6 @@ def run(quick: bool = True):
             out = stepf(params, opt, b)
         jax.block_until_ready(out)
         us = (time.perf_counter() - t0) / iters * 1e6
-        rows.append((f"pretrain_step_sfa_{impl}", us,
+        rows.append((f"pretrain_step_sfa_{backend}", us,
                      f"loss={float(out[2]['loss']):.4f}"))
     return rows

@@ -10,9 +10,8 @@
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import sparsify, densify, sfa_attention, dense_attention_ref
+from repro.core import sparsify, densify
 from repro.core.sparse import intersect_score
 from repro.kernels import flash_sfa, rtopk
 from repro.configs import get_config

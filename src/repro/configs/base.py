@@ -8,7 +8,7 @@ are only ever lowered abstractly via the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 
@@ -35,7 +35,15 @@ class AttentionConfig:
     rope_theta: float = 10_000.0
     causal: bool = True
     qk_norm: bool = False            # qwen3/gemma3-style per-head RMSNorm
-    impl: str = "xla"                # "xla" | "pallas"
+    # Attention-backend registry names (repro/models/backends.py).
+    # ``backend`` drives train/prefill full-sequence attention; ``"auto"``
+    # prefers the Pallas kernels on TPU and XLA elsewhere. An explicitly
+    # requested backend that cannot serve a layer (window / rope-protect /
+    # MLA) falls back to "xla" with a structured FallbackReport.
+    backend: str = "xla"             # "xla" | "pallas" | "auto"
+    # serving decode path: "pallas" = token-major flash_sfa_decode,
+    # "pallas_fm" = feature-major flash_sfa_decode_fm, "xla" = gather oracle
+    decode_backend: str = "auto"     # "xla" | "pallas" | "pallas_fm" | "auto"
     # SFA-on-RoPE handling (paper A.1): keep a few leading dims dense so
     # position info survives sparsification; 0 = sparsify everything.
     sfa_rope_protect: int = 0
@@ -177,7 +185,7 @@ def shape_by_name(name: str) -> ShapeConfig:
 
 
 def skip_reason(model: ModelConfig, shape: ShapeConfig) -> Optional[str]:
-    """Assignment skip rules (DESIGN.md §5). None = run the cell."""
+    """Assignment skip rules (DESIGN.md §6). None = run the cell."""
     if not model.causal and shape.kind == "decode":
         return "encoder-only: no autoregressive decode step"
     if shape.name == "long_500k":

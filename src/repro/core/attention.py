@@ -6,8 +6,8 @@ Activations are ``(batch, seq, heads, head_dim)`` ("BTHD"). GQA is handled by
 the caller repeating KV heads (models/attention.py). All paths are pure-JAX
 and lower through XLA for pjit/dry-run; the Pallas kernels in repro/kernels
 are drop-in replacements for the hot paths on real TPUs (selected via
-``impl='pallas'`` in the model config) and are validated against these
-functions in tests.
+``backend='pallas'`` through the registry in repro/models/backends.py) and
+are validated against these functions in tests.
 
 The SFA path implements the paper exactly: scores = Topk(Q)·Topk(K)ᵀ/√d with
 straight-through gradients (Eq. 3-6), computed without materializing the full

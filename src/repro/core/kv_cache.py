@@ -1,0 +1,190 @@
+"""Typed KV-cache pytrees — the serving-side data structures.
+
+Every decode cache in the repo is one of four registered-dataclass pytrees
+(replacing the four ad-hoc dict schemas that used to live in
+``models/attention.py`` and force shape-sniffing in the engine):
+
+  * ``DenseKV``     — dense K/V, the baseline layout.
+  * ``SparseKV``    — SFA layout: top-k K values + *packed* indices (uint8
+                      for d ≤ 256, uint16 for d ≤ 65536 — what realizes the
+                      paper's Appendix-J ratio ≈ 2d/(3k+4) on the K half),
+                      dense V, and optionally the protected leading RoPE
+                      dims stored dense (paper A.1).
+  * ``MLAKV``       — DeepSeek-V2 latent cache: shared c_kv + k_pe.
+  * ``MLASparseKV`` — MLA + SFA: adds the sparsified latent in *dense
+                      layout* (zeros off-support). Head-independent
+                      per-token codes make per-head gather-scoring
+                      pathological under SPMD (measured 7.6 TB/step of
+                      involuntary gathers — EXPERIMENTS.md §Perf i2); the
+                      dense-layout einsum is mathematically identical and
+                      shards trivially.
+
+All types share two structural invariants the engine and launch specs rely
+on (no shape-sniffing anywhere):
+
+  * unstacked (model-level) leaves are ``(batch, tokens, ...)`` — the token
+    axis is **1**;
+  * layer-stacked (engine-level) leaves are ``(layers, batch, tokens, ...)``
+    — the token axis is **2** (``STACKED_TOKEN_AXIS``).
+
+``write`` inserts one decoded token at a (possibly ragged) position;
+``insert_slot`` pads a batch-1 prefill cache to the engine's ``max_len`` and
+lands it in a slot of the batched cache. Index packing/unpacking helpers
+live here too (re-exported by ``repro.serve.kv_cache`` for the byte
+accounting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+TOKEN_AXIS = 1          # unstacked: (batch, tokens, ...)
+STACKED_TOKEN_AXIS = 2  # layer-stacked: (layers, batch, tokens, ...)
+
+
+# --------------------------------------------------------------------------
+# index packing (at-rest storage; compute stays int32)
+# --------------------------------------------------------------------------
+
+def idx_dtype(d: int):
+    """Smallest dtype that can address d feature coordinates."""
+    if d <= 256:
+        return jnp.uint8
+    if d <= 65_536:
+        return jnp.uint16
+    return jnp.int32
+
+
+def idx_bytes(d: int) -> int:
+    return jnp.dtype(idx_dtype(d)).itemsize
+
+
+def pack_indices(idx: jax.Array, d: int) -> jax.Array:
+    return idx.astype(idx_dtype(d))
+
+
+def unpack_indices(idx: jax.Array) -> jax.Array:
+    return idx.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# base
+# --------------------------------------------------------------------------
+
+class KVCache:
+    """Base for the typed cache pytrees (all fields are array leaves)."""
+
+    def write(self, pos, **updates) -> "KVCache":
+        """Insert one token's entries at position ``pos``.
+
+        ``pos`` is a scalar or a (b,)-ragged int32 vector; each update value
+        is ``(b, 1, ...)`` — one new token — and is cast to the stored dtype
+        (int32 indices pack down to the at-rest uint8/uint16 here).
+        """
+        changes = {}
+        ragged = jnp.ndim(pos) > 0
+        for name, val in updates.items():
+            if val is None:
+                continue
+            arr = getattr(self, name)
+            if ragged:
+                changes[name] = jax.vmap(
+                    lambda a_, v_, i_: jax.lax.dynamic_update_slice_in_dim(
+                        a_, v_.astype(a_.dtype), i_, axis=0))(arr, val, pos)
+            else:
+                changes[name] = jax.lax.dynamic_update_slice_in_dim(
+                    arr, val.astype(arr.dtype), pos, axis=TOKEN_AXIS)
+        return dataclasses.replace(self, **changes)
+
+    def insert_slot(self, src: "KVCache", *, slot: int,
+                    max_len: int) -> "KVCache":
+        """Land a layer-stacked batch-1 prefill cache in ``slot``.
+
+        ``self`` leaves are ``(L, B, max_len, ...)``; ``src`` leaves are
+        ``(L, 1, n, ...)`` with n = prompt length, padded up to ``max_len``.
+        Token axis is structural (STACKED_TOKEN_AXIS) — no shape-sniffing.
+        """
+        ax = STACKED_TOKEN_AXIS
+
+        def one(dst, s):
+            n = s.shape[ax]
+            if n != max_len:
+                pad = [(0, 0)] * s.ndim
+                pad[ax] = (0, max_len - n)
+                s = jnp.pad(s, pad)
+            start = (0, slot) + (0,) * (s.ndim - 2)
+            return jax.lax.dynamic_update_slice(dst, s.astype(dst.dtype),
+                                                start)
+
+        return jax.tree.map(one, self, src)
+
+
+def _register(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+    return cls
+
+
+# --------------------------------------------------------------------------
+# concrete layouts
+# --------------------------------------------------------------------------
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class DenseKV(KVCache):
+    """Dense cache: k/v are (b, n, hkv, head_dim)."""
+    k: jax.Array
+    v: jax.Array
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class SparseKV(KVCache):
+    """SFA cache: sparse K codes + dense V.
+
+    k_vals    (b, n, hkv, k)   top-k K entries (cache dtype)
+    k_idx     (b, n, hkv, k)   packed coordinate ids over the non-protected
+                               dims (uint8/uint16 at rest; int32 in compute)
+    v         (b, n, hkv, dv)  dense values
+    k_protect (b, n, hkv, p)   protected leading RoPE dims, dense (or None)
+    """
+    k_vals: jax.Array
+    k_idx: jax.Array
+    v: jax.Array
+    k_protect: Optional[jax.Array] = None
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class MLAKV(KVCache):
+    """MLA latent cache: ckv (b, n, r), kpe (b, n, rope_head_dim)."""
+    ckv: jax.Array
+    kpe: jax.Array
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class MLASparseKV(KVCache):
+    """MLA + SFA: adds the sparsified latent in dense layout (ckv_sp)."""
+    ckv: jax.Array
+    kpe: jax.Array
+    ckv_sp: jax.Array
+
+
+def cache_nbytes(cache) -> int:
+    """Total at-rest bytes of a cache pytree (arrays or ShapeDtypeStructs),
+    counting only KVCache leaves (SSM recurrent states are not KV)."""
+    total = 0
+    for node in jax.tree.leaves(
+            cache, is_leaf=lambda x: isinstance(x, KVCache)):
+        if not isinstance(node, KVCache):
+            continue
+        for leaf in jax.tree.leaves(node):
+            size = 1
+            for s in leaf.shape:
+                size *= s
+            total += size * jnp.dtype(leaf.dtype).itemsize
+    return total

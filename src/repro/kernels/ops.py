@@ -1,4 +1,9 @@
-"""Jitted public wrappers around the Pallas kernels + backend dispatch.
+"""Jitted public wrappers around the Pallas kernels (kernel-level dispatch).
+
+Production code selects execution paths through the typed attention-backend
+registry (repro/models/backends.py) — the registry's ``pallas`` backend is
+the only production caller passing ``impl``/``bwd_impl`` here; tests use
+them directly to pin kernel-vs-oracle parity.
 
 ``sfa_attention_op`` is the full fused pipeline (rtopk sparsify -> FlashSFA)
 on (batch, seq, heads, head_dim) activations, matching the signature of

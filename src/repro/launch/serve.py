@@ -1,7 +1,13 @@
 """Serving launcher: build a model and answer batched requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
-        --requests 4 --max-new 16
+        --requests 4 --max-new 16 --decode-backend pallas
+
+``--decode-backend`` selects the serving attention kernel through the
+backend registry (repro/models/backends.py): ``pallas`` = token-major
+``flash_sfa_decode``, ``pallas_fm`` = feature-major, ``xla`` = gather
+oracle, ``auto`` = platform default. Capability fallbacks (windowed or
+rope-protected layers, MLA, dense caches) are printed at exit.
 """
 import argparse
 
@@ -10,6 +16,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init as model_init
+from repro.models.backends import fallback_reports
 from repro.serve import DecodeEngine, EngineConfig
 
 
@@ -20,6 +27,8 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-backend", default=None,
+                    choices=["xla", "pallas", "pallas_fm", "auto"])
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -29,7 +38,7 @@ def main():
     params = model_init(jax.random.PRNGKey(0), cfg)
     eng = DecodeEngine(params, cfg, EngineConfig(
         max_slots=max(args.requests, 2), max_len=args.max_len,
-        temperature=args.temperature))
+        temperature=args.temperature, decode_backend=args.decode_backend))
     rs = np.random.RandomState(0)
     for i in range(args.requests):
         prompt = rs.randint(0, cfg.vocab_size,
@@ -43,6 +52,9 @@ def main():
         print(f"slot {i}: {eng.outputs[i]}")
     print(f"{steps} batched decode steps, "
           f"{sum(len(o) for o in eng.outputs)} tokens")
+    for rep in fallback_reports():
+        print(f"backend fallback: {rep.requested} -> {rep.selected} "
+              f"({rep.reason}) at {rep.where}")
 
 
 if __name__ == "__main__":

@@ -11,13 +11,12 @@ weak-type-correct, shardable, zero allocation.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.kv_cache import KVCache, STACKED_TOKEN_AXIS
 from repro.models import init as model_init, init_decode_caches
 
 DATA_AXES = ("data",)            # FSDP axes (in-pod; pod stays pure-DP)
@@ -145,6 +144,10 @@ def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
       3. when batch itself is too small (long_500k b=1), the length axis
          additionally takes the data axis;
       4. MLA latent dim / SSM channel dims shard over model when divisible.
+
+    KVCache nodes carry their token axis structurally
+    (``STACKED_TOKEN_AXIS``), so the length-axis rule dispatches on type;
+    SSM recurrent states have no token axis.
     """
     a = cfg.attention
     batch_ax = ("pod", "data") if "pod" in mesh.shape else ("data",)
@@ -164,14 +167,14 @@ def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
         len_axes.append(MODEL_AXIS)
     len_ax = tuple(len_axes) if len_axes else None
 
-    def one(leaf):
+    def leaf_spec(leaf, token_axis):
         dims = [None] * leaf.ndim
         if leaf.ndim >= 2 and batch_ok:
             dims[1] = batch_ax
         used_model = False
         for i in range(2, leaf.ndim):
             sz = leaf.shape[i]
-            if sz == max_len:
+            if i == token_axis:
                 dims[i] = len_ax
                 used_model = used_model or (len_ax and MODEL_AXIS in len_ax)
             elif a is not None and a.mla is None and i == 3 and \
@@ -191,7 +194,14 @@ def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
                     break
         return _clean(mesh, P(*dims), leaf.shape)
 
-    return jax.tree.map(one, caches_shape)
+    def one(node):
+        if isinstance(node, KVCache):
+            return jax.tree.map(
+                lambda leaf: leaf_spec(leaf, STACKED_TOKEN_AXIS), node)
+        return leaf_spec(node, -1)
+
+    return jax.tree.map(one, caches_shape,
+                        is_leaf=lambda x: isinstance(x, KVCache))
 
 
 def batch_axes(mesh: Mesh):

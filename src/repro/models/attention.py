@@ -3,12 +3,20 @@
 Three call modes share parameters:
   * ``mode="train"``   — full-sequence causal (or bidirectional) attention.
   * ``mode="prefill"`` — same compute, additionally returns the KV cache
-                         (sparse for SFA layers) for the decode engine.
+                         (a typed ``KVCache`` pytree, sparse for SFA layers)
+                         for the decode engine.
   * ``mode="decode"``  — one new token against the cache; SFA scoring reads
                          the cache *sparsely* (O(nk) gathered bytes — the IO
-                         pattern the roofline measures; the Pallas decode
-                         kernel is the TPU-hardened version of the same
-                         access pattern).
+                         pattern the roofline measures).
+
+Execution backends are resolved through the typed registry
+(``repro.models.backends``): ``cfg.attention.backend`` selects the
+full-sequence path (XLA chunked softmax vs fused rtopk→FlashSFA Pallas
+kernels) and ``cfg.attention.decode_backend`` the serving decode path (XLA
+gather oracle vs the ``flash_sfa_decode`` / ``flash_sfa_decode_fm`` Pallas
+kernels). Capability mismatches (windowed layers, protected RoPE dims, MLA)
+fall back to ``xla`` with a structured, queryable ``FallbackReport`` instead
+of a trace-time warning.
 
 SFA-with-RoPE (paper A.1): ``sfa_rope_protect`` leading head dims are kept
 dense (always-selected) so positional phase survives sparsification; Top-k
@@ -21,17 +29,21 @@ scoring plus densely for the value aggregation, and k_pe densely.
 """
 from __future__ import annotations
 
-import warnings
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AttentionConfig, ModelConfig
-from repro.core.attention import chunked_attention, NEG_INF
-from repro.core.sparse import topk_st, sparsify, densify, SparseCode
-from repro.kernels.ops import sfa_attention_op, dense_attention_op
+from repro.core.attention import chunked_attention
+from repro.core.kv_cache import (
+    DenseKV, KVCache, MLAKV, MLASparseKV, SparseKV, idx_dtype, pack_indices,
+)
+from repro.core.sparse import topk_st, sparsify, SparseCode
 from repro.distributed.sharding import axis_size, constrain
+from repro.models.backends import (
+    AttentionRequest, DecodeQuery, expand_kv as _expand_kv, select_backend,
+)
 from repro.models.layers import dense, dense_init, norm_init, apply_norm, rope
 
 
@@ -102,82 +114,51 @@ def attention_init(rng, cfg: ModelConfig):
 # SFA helpers
 # --------------------------------------------------------------------------
 
-def _sfa_st(x, a: AttentionConfig):
-    """Straight-through Top-k with optional protected leading RoPE dims."""
-    if a.sfa_k is None:
-        return x
-    p = a.sfa_rope_protect
-    if p:
-        return jnp.concatenate([x[..., :p], topk_st(x[..., p:], a.sfa_k)], -1)
-    return topk_st(x, a.sfa_k)
-
-
 def _sfa_code(x, a: AttentionConfig) -> SparseCode:
     """Sparse code of the non-protected dims (cache storage format)."""
     p = a.sfa_rope_protect
     return sparsify(x[..., p:], a.sfa_k)
 
 
-def _gather_score(q, k_vals, k_idx, scale):
-    """Sparse decode scoring: s[b,n,h] = Σ_t k_vals[b,n,h,t]·q[b,h,idx].
-
-    q: (b, h, d); k_vals/k_idx: (b, n, h, k). O(n·k) touched K bytes — the
-    paper's decode IO claim, expressed as an XLA gather.
-    """
-    b, n, h, k = k_vals.shape
-    qb = jnp.broadcast_to(q[:, None].astype(jnp.float32), (b, n, h, q.shape[-1]))
-    qg = jnp.take_along_axis(qb, k_idx, axis=-1)            # (b, n, h, k)
-    return (qg * k_vals.astype(jnp.float32)).sum(-1) * scale  # (b, n, h)
+def _request(a: AttentionConfig, *, mode: str, window) -> AttentionRequest:
+    """Static backend request for this layer (trace-time selection)."""
+    return AttentionRequest(
+        mode=mode,
+        causal=a.causal if mode == "full" else True,
+        window=(window is not None) or (a.window is not None),
+        rope_protect=a.sfa_k is not None and a.sfa_rope_protect > 0,
+        mla=a.mla is not None,
+        sparse=a.sfa_k is not None,
+    )
 
 
 # --------------------------------------------------------------------------
 # cache
 # --------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Per-layer decode cache (caller stacks across layers)."""
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    """Per-layer typed decode cache (caller stacks across layers)."""
     a = cfg.attention
     if a.mla is not None:
         m = a.mla
-        c = {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
-             "kpe": jnp.zeros((batch, max_len, m.rope_head_dim), dtype)}
+        ckv = jnp.zeros((batch, max_len, m.kv_lora_rank), dtype)
+        kpe = jnp.zeros((batch, max_len, m.rope_head_dim), dtype)
         if a.sfa_k is not None:
-            # XLA-proxy layout: the sparsified latent in DENSE layout (zeros
-            # off-support). Head-independent per-token codes make per-head
-            # gather-scoring pathological under SPMD (measured 7.6 TB/step of
-            # involuntary gathers — EXPERIMENTS.md §Perf i2); a dense-layout
-            # einsum is mathematically identical and shards trivially. The
-            # Pallas decode kernel keeps the compact (vals, idx) layout.
-            c["ckv_sp"] = jnp.zeros((batch, max_len, m.kv_lora_rank), dtype)
-        return c
+            return MLASparseKV(ckv=ckv, kpe=kpe, ckv_sp=jnp.zeros_like(ckv))
+        return MLAKV(ckv=ckv, kpe=kpe)
     hkv, hd = a.num_kv_heads, a.head_dim
     if a.sfa_k is not None:
         p = a.sfa_rope_protect
-        c = {"k_vals": jnp.zeros((batch, max_len, hkv, a.sfa_k), dtype),
-             "k_idx": jnp.zeros((batch, max_len, hkv, a.sfa_k), jnp.int32),
-             "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
-        if p:
-            c["k_protect"] = jnp.zeros((batch, max_len, hkv, p), dtype)
-        return c
-    return {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
-            "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
-
-
-def _write_cache(cache, updates, pos):
-    """Insert one token's entries at position ``pos`` (b,)-ragged."""
-    out = dict(cache)
-    b = pos.shape[0] if jnp.ndim(pos) else None
-    for key, val in updates.items():
-        arr = cache[key]
-        # val: (b, 1, ...) one new token
-        if b is None:
-            out[key] = jax.lax.dynamic_update_slice_in_dim(arr, val.astype(arr.dtype), pos, axis=1)
-        else:
-            idx = pos[:, None]                              # (b, 1)
-            out[key] = jax.vmap(
-                lambda a_, v_, i_: jax.lax.dynamic_update_slice_in_dim(
-                    a_, v_.astype(a_.dtype), i_, axis=0))(arr, val, pos)
-    return out
+        kk = min(a.sfa_k, hd - p)
+        return SparseKV(
+            k_vals=jnp.zeros((batch, max_len, hkv, kk), dtype),
+            k_idx=jnp.zeros((batch, max_len, hkv, kk), idx_dtype(hd - p)),
+            v=jnp.zeros((batch, max_len, hkv, hd), dtype),
+            k_protect=(jnp.zeros((batch, max_len, hkv, p), dtype)
+                       if p else None))
+    return DenseKV(k=jnp.zeros((batch, max_len, hkv, hd), dtype),
+                   v=jnp.zeros((batch, max_len, hkv, hd), dtype))
 
 
 # --------------------------------------------------------------------------
@@ -186,7 +167,7 @@ def _write_cache(cache, updates, pos):
 
 class AttentionOut(NamedTuple):
     out: jax.Array
-    cache: Optional[dict]
+    cache: Optional[KVCache]
     distill: jax.Array = jnp.zeros((), jnp.float32)
 
 
@@ -221,75 +202,32 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
         if a.sfa_k is not None:
             p = a.sfa_rope_protect
             kc = _sfa_code(k, a)                      # (b, 1, hkv, k)
-            upd = {"k_vals": kc.values, "k_idx": kc.indices, "v": v}
-            if p:
-                upd["k_protect"] = k[..., :p]
-            cache = _write_cache(cache, upd, cache_len)
-            qs = _sfa_st(q, a)                        # sparse q (dense layout)
-            nmax = cache["v"].shape[1]
-            kv_r = _expand_kv(cache["k_vals"], h)     # (b, nmax, h, k)
-            ki_r = _expand_kv(cache["k_idx"], h)
-            s = _gather_score(
-                jnp.einsum("bqhd->bhd", qs[..., p:] if p else qs),
-                kv_r, ki_r, scale)
-            if p:
-                kp = _expand_kv(cache["k_protect"], h)    # (b, nmax, h, p)
-                s = s + jnp.einsum("bhp,bnhp->bnh", q[:, 0, :, :p].astype(jnp.float32),
-                                   kp.astype(jnp.float32)) * scale
+            cache = cache.write(cache_len, k_vals=kc.values, k_idx=kc.indices,
+                                v=v, k_protect=k[..., :p] if p else None)
         else:
-            cache = _write_cache(cache, {"k": k, "v": v}, cache_len)
-            nmax = cache["v"].shape[1]
-            kr = _expand_kv(cache["k"], h)
-            s = jnp.einsum("bqhd,bnhd->bnh", q.astype(jnp.float32),
-                           kr.astype(jnp.float32))[:, :, :] * scale
-        # mask: valid prefix (+ sliding window)
-        posn = jnp.arange(nmax)[None, :]
-        limit = (cache_len + 1)[:, None] if jnp.ndim(cache_len) else cache_len + 1
-        ok = posn < limit
-        if window is not None:
-            ok = ok & (posn > limit - 1 - window)
-        s = jnp.where(ok[..., None], s, NEG_INF)
-        pr = jax.nn.softmax(s, axis=1)                    # over n
-        vr = _expand_kv(cache["v"], h)
-        o = jnp.einsum("bnh,bnhd->bhd", pr, vr.astype(jnp.float32))[:, None]
-        o = o.astype(dt).reshape(b, 1, h * hd)
+            cache = cache.write(cache_len, k=k, v=v)
+        sel = select_backend(a.decode_backend,
+                             _request(a, mode="decode", window=window),
+                             where=f"{cfg.name}/attention")
+        ctx = sel.backend.decode(DecodeQuery(q=q), cache, cache_len,
+                                 scale=scale, window=window, sfa_k=a.sfa_k,
+                                 rope_protect=a.sfa_rope_protect)
+        o = ctx.astype(dt).reshape(b, 1, h * hd)
         return AttentionOut(dense(params["w_o"], o, dt), cache)
 
     # train / prefill: full-sequence attention (heads padded to TP degree).
-    # impl="pallas" routes through the fused rtopk->FlashSFA kernels (fwd AND
-    # bwd — kernels/flash_sfa_bwd.py); windowed / rope-protected layers keep
-    # the XLA path (no Pallas lowering for those yet).
-    use_pallas = (a.impl == "pallas" and a.window is None and window is None
-                  and (a.sfa_k is None or a.sfa_rope_protect == 0))
-    if a.impl == "pallas" and not use_pallas:
-        # trace-time warning: fires once per compile, not per step
-        warnings.warn(
-            "impl='pallas' requested but this layer is windowed or "
-            "rope-protected (no Pallas lowering yet); falling back to the "
-            "XLA path — pallas-vs-xla comparisons on this config are void",
-            stacklevel=2)
-    if use_pallas:
-        qp, pad_h = _pad_heads(q, h)
-        h_eff = h + pad_h
-        kr = _expand_kv(k, h_eff)
-        vr = _expand_kv(v, h_eff)
-        qp, kr, vr = _constrain_qkv(qp, kr, vr, h_eff)
-        if a.sfa_k is not None:
-            o = sfa_attention_op(qp, kr, vr, sfa_k=a.sfa_k, causal=a.causal,
-                                 scale=scale, impl="pallas")
-        else:
-            o = dense_attention_op(qp, kr, vr, causal=a.causal, scale=scale,
-                                   impl="pallas")
-    else:
-        qs = _sfa_st(q, a)
-        ks = _sfa_st(k, a)
-        qs, pad_h = _pad_heads(qs, h)
-        h_eff = h + pad_h
-        kr = _expand_kv(ks, h_eff)
-        vr = _expand_kv(v, h_eff)
-        qs, kr, vr = _constrain_qkv(qs, kr, vr, h_eff)
-        o = chunked_attention(qs, kr, vr, causal=a.causal, window=window,
-                              scale=scale, chunk_size=min(1024, max(n, 128)))
+    # backend="pallas" routes through the fused rtopk->FlashSFA kernels (fwd
+    # AND bwd — kernels/flash_sfa_bwd.py); windowed / rope-protected layers
+    # fall back to the XLA path via the registry (structured report).
+    sel = select_backend(a.backend, _request(a, mode="full", window=window),
+                         where=f"{cfg.name}/attention")
+    qp, pad_h = _pad_heads(q, h)
+    h_eff = h + pad_h
+    qp, kp, vp = _constrain_qkv(qp, k, v, h_eff)
+    # k/v stay at hkv heads: the backend sparsifies first, then expands
+    o = sel.backend.full(qp, kp, vp, num_heads=h_eff, sfa_k=a.sfa_k,
+                         rope_protect=a.sfa_rope_protect, causal=a.causal,
+                         window=window, scale=scale)
     if pad_h:
         o = o[:, :, :h]
     distill = jnp.zeros((), jnp.float32)
@@ -307,22 +245,13 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
         if a.sfa_k is not None:
             p = a.sfa_rope_protect
             kc = _sfa_code(k, a)
-            new_cache = {"k_vals": kc.values.astype(dt), "k_idx": kc.indices,
-                         "v": v}
-            if p:
-                new_cache["k_protect"] = k[..., :p]
+            new_cache = SparseKV(k_vals=kc.values.astype(dt),
+                                 k_idx=pack_indices(kc.indices, hd - p),
+                                 v=v,
+                                 k_protect=k[..., :p] if p else None)
         else:
-            new_cache = {"k": k, "v": v}
+            new_cache = DenseKV(k=k, v=v)
     return AttentionOut(out, new_cache, distill)
-
-
-def _expand_kv(t, h):
-    """(b, n, hkv, ...) -> (b, n, h, ...) GQA head repeat."""
-    b, n, hkv = t.shape[:3]
-    if hkv == h:
-        return t
-    rep = h // hkv
-    return jnp.repeat(t, rep, axis=2)
 
 
 # --------------------------------------------------------------------------
@@ -369,29 +298,23 @@ def _mla_apply(params, x, *, cfg: ModelConfig, positions, mode, cache,
 
     if mode == "decode":
         assert cache is not None and cache_len is not None
-        upd = {"ckv": ckv, "kpe": kpe[:, :, 0]}
-        if a.sfa_k is not None:
-            upd["ckv_sp"] = topk_st(ckv, a.sfa_k)
-        cache = _write_cache(cache, upd, cache_len)
-        nmax = cache["ckv"].shape[1]
-        if a.sfa_k is not None:
-            qs = topk_st(q_eff, a.sfa_k)                 # (b, 1, h, r)
-            s = jnp.einsum("bqhr,bnr->bnh", qs.astype(jnp.float32),
-                           cache["ckv_sp"].astype(jnp.float32)) * scale
-        else:
-            s = jnp.einsum("bqhr,bnr->bnh", q_eff.astype(jnp.float32),
-                           cache["ckv"].astype(jnp.float32)) * scale
-        s = s + jnp.einsum("bqhp,bnp->bnh", q_pe.astype(jnp.float32),
-                           cache["kpe"].astype(jnp.float32)) * scale
-        posn = jnp.arange(nmax)[None, :]
-        limit = (cache_len + 1)[:, None] if jnp.ndim(cache_len) else cache_len + 1
-        s = jnp.where((posn < limit)[..., None], s, NEG_INF)
-        pr = jax.nn.softmax(s, axis=1)
-        o_lat = jnp.einsum("bnh,bnr->bhr", pr,
-                           cache["ckv"].astype(jnp.float32))[:, None].astype(dt)
+        cache = cache.write(
+            cache_len, ckv=ckv, kpe=kpe[:, :, 0],
+            ckv_sp=(topk_st(ckv, a.sfa_k) if a.sfa_k is not None else None))
+        sel = select_backend(a.decode_backend,
+                             _request(a, mode="decode", window=None),
+                             where=f"{cfg.name}/mla")
+        o_lat = sel.backend.decode(
+            DecodeQuery(q=q_eff, q_pe=q_pe), cache, cache_len,
+            scale=scale, window=None, sfa_k=a.sfa_k, rope_protect=0)
+        o_lat = o_lat[:, None].astype(dt)             # (b, 1, h, r)
         return AttentionOut(_mla_out(params, o_lat, cfg=cfg), cache)
 
-    # train / prefill: latent attention with 1 shared kv "head"
+    # train / prefill: latent attention with 1 shared kv "head"; the latent
+    # sparsification is MLA-specific, so the backend runs the pre-sparsified
+    # dense-layout latents (registry still reports pallas fallbacks).
+    sel = select_backend(a.backend, _request(a, mode="full", window=None),
+                         where=f"{cfg.name}/mla")
     if a.sfa_k is not None:
         q_eff = topk_st(q_eff, a.sfa_k)
         ckv_s = topk_st(ckv, a.sfa_k)
@@ -404,14 +327,17 @@ def _mla_apply(params, x, *, cfg: ModelConfig, positions, mode, cache,
     kcat = jnp.broadcast_to(kcat, (b, n, h_eff, kcat.shape[-1]))
     vlat = jnp.broadcast_to(ckv[:, :, None], (b, n, h_eff, m.kv_lora_rank))
     qcat, kcat, vlat = _constrain_qkv(qcat, kcat, vlat, h_eff)
-    o_lat = chunked_attention(qcat, kcat, vlat, causal=a.causal, scale=scale,
-                              chunk_size=min(1024, max(n, 128)))
+    o_lat = sel.backend.full(qcat, kcat, vlat, num_heads=h_eff, sfa_k=None,
+                             rope_protect=0, causal=a.causal, window=None,
+                             scale=scale)
     if pad_h:
         o_lat = o_lat[:, :, :h]
     out = _mla_out(params, o_lat, cfg=cfg)
     new_cache = None
     if mode == "prefill":
-        new_cache = {"ckv": ckv, "kpe": kpe[:, :, 0]}
         if a.sfa_k is not None:
-            new_cache["ckv_sp"] = topk_st(ckv, a.sfa_k).astype(dt)
+            new_cache = MLASparseKV(ckv=ckv, kpe=kpe[:, :, 0],
+                                    ckv_sp=topk_st(ckv, a.sfa_k).astype(dt))
+        else:
+            new_cache = MLAKV(ckv=ckv, kpe=kpe[:, :, 0])
     return AttentionOut(out, new_cache)

@@ -1,0 +1,441 @@
+"""Typed attention-backend registry: capability-based kernel selection.
+
+One seam for every attention execution path in the repo. A backend is an
+object with a ``Capabilities`` record and two entry points:
+
+  * ``full(q, k, v, ...)``   — full-sequence attention (train / prefill) on
+                               already head-expanded ``(b, n, h, d)``
+                               activations;
+  * ``decode(query, cache, lengths, ...)`` — one new token against a typed
+                               ``KVCache`` (repro/core/kv_cache.py),
+                               returning the per-head context ``(b, h, dv)``.
+
+Registered backends:
+
+  * ``xla``       — pure-JAX paths: chunked online-softmax for full
+                    sequences, gather-scoring for sparse decode. Supports
+                    everything (windows, protected RoPE dims, MLA, both
+                    cache layouts) and is the correctness oracle.
+  * ``pallas``    — fused rtopk→FlashSFA kernels for full sequences
+                    (forward AND backward — kernels/flash_sfa_bwd.py) and
+                    the token-major sparse-cache decode kernel
+                    ``flash_sfa_decode`` (O(nk) K-bytes per step).
+  * ``pallas_fm`` — decode-only: the beyond-paper feature-major decode
+                    kernel ``flash_sfa_decode_fm`` (sparse query selects k
+                    feature rows of a dense feature-major K image).
+  * ``auto``      — not a backend but a selection policy: the first
+                    registered backend whose capabilities cover the request,
+                    preferring the Pallas kernels on TPU and the XLA paths
+                    elsewhere (interpret-mode Pallas on CPU is a correctness
+                    tool, not a serving path).
+
+Selection replaces the old scattered ``impl``/``bwd_impl`` strings and the
+silent ``use_pallas`` predicate: ``select_backend`` either returns the
+requested backend or falls back to ``xla`` with a structured
+``FallbackReport`` (deduped, surfaced through ONE ``logging.warning`` here
+and queryable via ``fallback_reports()`` — no more trace-time
+``warnings.warn``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import chunked_attention, NEG_INF
+from repro.core.kv_cache import (
+    KVCache, MLAKV, MLASparseKV, SparseKV, unpack_indices,
+)
+from repro.core.sparse import SparseCode, sparsify, to_feature_major, topk_st
+from repro.kernels.flash_sfa_decode import flash_sfa_decode, flash_sfa_decode_fm
+from repro.kernels.ops import dense_attention_op, sfa_attention_op
+
+_LOG = logging.getLogger(__name__)
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------
+# request / capabilities
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionRequest:
+    """Static description of what a layer needs from a backend."""
+    mode: str                    # "full" (train/prefill) | "decode"
+    causal: bool = True
+    window: bool = False         # sliding-window mask required
+    rope_protect: bool = False   # SFA with protected leading RoPE dims
+    mla: bool = False            # latent (MLA) attention
+    sparse: bool = False         # sfa_k is set
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    full: bool = False           # full-sequence (train / prefill) path
+    decode: bool = False         # single-token cached decode path
+    causal: bool = True
+    bidirectional: bool = False
+    window: bool = False
+    rope_protect: bool = False
+    mla: bool = False
+    sparse: bool = True
+    dense: bool = True
+    differentiable: bool = False
+
+
+class DecodeQuery(NamedTuple):
+    """Query pieces for one decode step. Sparsification is a backend
+    concern (each backend runs exactly one top-k pass, in the form its
+    kernel wants — dense-layout for the gather/token-major paths, compact
+    (vals, idx) for the feature-major kernel).
+
+    q    (b, 1, h, d)  dense post-RoPE query (for MLA: the latent q_eff)
+    q_pe (b, 1, h, dr) MLA RoPE query part (None outside MLA)
+    """
+    q: jax.Array
+    q_pe: Optional[jax.Array] = None
+
+
+class AttentionBackend:
+    name: str = "?"
+    caps: Capabilities = Capabilities()
+
+    def unsupported_reason(self, req: AttentionRequest) -> Optional[str]:
+        """None if this backend can serve ``req``, else a human reason."""
+        c = self.caps
+        if req.mode == "full" and not c.full:
+            return "no full-sequence path"
+        if req.mode == "decode" and not c.decode:
+            return "no decode path"
+        if req.causal and not c.causal:
+            return "causal masking not supported"
+        if not req.causal and not c.bidirectional:
+            return "bidirectional attention not supported"
+        if req.window and not c.window:
+            return "windowed attention not supported"
+        if req.rope_protect and not c.rope_protect:
+            return "sfa_rope_protect dims not supported"
+        if req.mla and not c.mla:
+            return "MLA latent attention not supported"
+        if req.sparse and not c.sparse:
+            return "SFA sparse attention not supported"
+        if not req.sparse and not c.dense:
+            return "dense attention not supported"
+        return None
+
+    # entry points ------------------------------------------------------
+    def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
+             window, scale):
+        """q: (b, n, h, d); k/v: (b, n, hkv, d) — the backend expands KV
+        heads itself (after any sparsification, so top-k runs at hkv)."""
+        raise NotImplementedError(self.name)
+
+    def decode(self, query: DecodeQuery, cache: KVCache, lengths, *,
+               scale, window, sfa_k, rope_protect):
+        raise NotImplementedError(self.name)
+
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+def expand_kv(t, h):
+    """(b, n, hkv, ...) -> (b, n, h, ...) GQA head repeat."""
+    hkv = t.shape[2]
+    if hkv == h:
+        return t
+    return jnp.repeat(t, h // hkv, axis=2)
+
+
+def _fold_expand(t, h):
+    """(b, n, hkv, ...) -> (b*h, n, ...) for the per-(b,h) decode kernels."""
+    b, n = t.shape[:2]
+    t = jnp.moveaxis(expand_kv(t, h), 2, 1)          # (b, h, n, ...)
+    return t.reshape((b * h, n) + t.shape[3:])
+
+
+def _st_protect(x, sfa_k, p):
+    """Straight-through top-k keeping p leading dims dense (paper A.1)."""
+    if sfa_k is None:
+        return x
+    if p:
+        return jnp.concatenate([x[..., :p], topk_st(x[..., p:], sfa_k)], -1)
+    return topk_st(x, sfa_k)
+
+
+def _prefix_mask(nmax, lengths, window):
+    """(b, n) validity mask: cache prefix (incl. the just-written token),
+    optionally restricted to a sliding window."""
+    posn = jnp.arange(nmax)[None, :]
+    limit = (lengths + 1)[:, None] if jnp.ndim(lengths) else lengths + 1
+    ok = posn < limit
+    if window is not None:
+        ok = ok & (posn > limit - 1 - window)
+    return ok
+
+
+def _gather_score(q, k_vals, k_idx, scale):
+    """Sparse decode scoring: s[b,n,h] = Σ_t k_vals[b,n,h,t]·q[b,h,idx].
+
+    q: (b, h, d); k_vals/k_idx: (b, n, h, k). O(n·k) touched K bytes — the
+    paper's decode IO claim, expressed as an XLA gather (the oracle the
+    Pallas decode kernels are checked against).
+    """
+    b, n, h, k = k_vals.shape
+    qb = jnp.broadcast_to(q[:, None].astype(jnp.float32),
+                          (b, n, h, q.shape[-1]))
+    qg = jnp.take_along_axis(qb, k_idx, axis=-1)            # (b, n, h, k)
+    return (qg * k_vals.astype(jnp.float32)).sum(-1) * scale  # (b, n, h)
+
+
+# --------------------------------------------------------------------------
+# XLA backend — the oracle; supports everything
+# --------------------------------------------------------------------------
+
+class XLABackend(AttentionBackend):
+    name = "xla"
+    caps = Capabilities(full=True, decode=True, causal=True,
+                        bidirectional=True, window=True, rope_protect=True,
+                        mla=True, sparse=True, dense=True,
+                        differentiable=True)
+
+    def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
+             window, scale):
+        if sfa_k is not None:
+            # sparsify at hkv heads, BEFORE the GQA repeat (group-size-x
+            # cheaper; expanded copies would re-run identical top-k rows)
+            q = _st_protect(q, sfa_k, rope_protect)
+            k = _st_protect(k, sfa_k, rope_protect)
+        k = expand_kv(k, num_heads)
+        v = expand_kv(v, num_heads)
+        n = q.shape[1]
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 scale=scale,
+                                 chunk_size=min(1024, max(n, 128)))
+
+    def decode(self, query: DecodeQuery, cache: KVCache, lengths, *,
+               scale, window, sfa_k, rope_protect):
+        if isinstance(cache, (MLAKV, MLASparseKV)):
+            return self._decode_mla(query, cache, lengths, scale=scale,
+                                    sfa_k=sfa_k)
+        h = query.q.shape[2]
+        nmax = cache.v.shape[1]
+        if isinstance(cache, SparseKV):
+            p = rope_protect
+            qs = _st_protect(query.q, sfa_k, p)[:, 0]        # (b, h, d)
+            kv_r = expand_kv(cache.k_vals, h)                # (b, n, h, k)
+            ki_r = expand_kv(unpack_indices(cache.k_idx), h)
+            s = _gather_score(qs[..., p:] if p else qs, kv_r, ki_r, scale)
+            if p:
+                kp = expand_kv(cache.k_protect, h)           # (b, n, h, p)
+                s = s + jnp.einsum(
+                    "bhp,bnhp->bnh",
+                    query.q[:, 0, :, :p].astype(jnp.float32),
+                    kp.astype(jnp.float32)) * scale
+        else:
+            kr = expand_kv(cache.k, h)
+            s = jnp.einsum("bqhd,bnhd->bnh",
+                           query.q.astype(jnp.float32),
+                           kr.astype(jnp.float32)) * scale
+        ok = _prefix_mask(nmax, lengths, window)
+        s = jnp.where(ok[..., None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=1)                       # over n
+        vr = expand_kv(cache.v, h)
+        return jnp.einsum("bnh,bnhd->bhd", pr, vr.astype(jnp.float32))
+
+    def _decode_mla(self, query, cache, lengths, *, scale, sfa_k):
+        nmax = cache.ckv.shape[1]
+        sparse = sfa_k is not None
+        ctx = cache.ckv_sp if sparse else cache.ckv
+        qlat = topk_st(query.q, sfa_k) if sparse else query.q  # (b, 1, h, r)
+        s = jnp.einsum("bqhr,bnr->bnh", qlat.astype(jnp.float32),
+                       ctx.astype(jnp.float32)) * scale
+        s = s + jnp.einsum("bqhp,bnp->bnh",
+                           query.q_pe.astype(jnp.float32),
+                           cache.kpe.astype(jnp.float32)) * scale
+        ok = _prefix_mask(nmax, lengths, None)
+        s = jnp.where(ok[..., None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=1)
+        return jnp.einsum("bnh,bnr->bhr", pr,
+                          cache.ckv.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Pallas backends
+# --------------------------------------------------------------------------
+
+class PallasBackend(AttentionBackend):
+    """Fused rtopk→FlashSFA (full) + token-major sparse decode kernel."""
+    name = "pallas"
+    caps = Capabilities(full=True, decode=True, causal=True,
+                        bidirectional=True, window=False, rope_protect=False,
+                        mla=False, sparse=True, dense=True,
+                        differentiable=True)
+
+    def __init__(self, bwd: str = "pallas"):
+        self._bwd = bwd
+
+    def unsupported_reason(self, req):
+        r = super().unsupported_reason(req)
+        if r is not None:
+            return r
+        if req.mode == "decode" and not req.sparse:
+            return "dense KV cache: no Pallas dense-decode kernel"
+        return None
+
+    def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
+             window, scale):
+        k = expand_kv(k, num_heads)
+        v = expand_kv(v, num_heads)
+        if sfa_k is not None:
+            return sfa_attention_op(q, k, v, sfa_k=sfa_k, causal=causal,
+                                    scale=scale, impl="pallas",
+                                    bwd_impl=self._bwd)
+        return dense_attention_op(q, k, v, causal=causal, scale=scale,
+                                  impl="pallas")
+
+    def decode(self, query: DecodeQuery, cache: SparseKV, lengths, *,
+               scale, window, sfa_k, rope_protect):
+        b, _, h, d = query.q.shape
+        qs = topk_st(query.q[:, 0], sfa_k)                   # (b, h, d)
+        kv = _fold_expand(cache.k_vals, h)                   # (b*h, n, k)
+        ki = _fold_expand(unpack_indices(cache.k_idx), h)
+        # f32 V: the kernel emits in V's dtype; keep the f32 accumulator
+        # precision end-to-end so greedy tokens match the XLA oracle exactly
+        vf = _fold_expand(cache.v, h).astype(jnp.float32)
+        lens = jnp.repeat(lengths + 1, h)                    # incl. new token
+        o = flash_sfa_decode(qs.reshape(b * h, d), kv, ki, vf,
+                             lens, d=d, scale=scale,
+                             interpret=not _ON_TPU)
+        return o.reshape(b, h, -1)
+
+
+class PallasFMBackend(AttentionBackend):
+    """Feature-major decode: the sparse *query* selects which k of the d
+    feature rows to stream (DESIGN.md §2, beyond-paper layout).
+
+    The serving cache is token-major (``SparseKV``); the feature-major K
+    image is materialized from the stored codes each step, so this backend
+    currently demonstrates the kernel's access pattern and exact-parity
+    math rather than its HBM savings — a persistent feature-major cache
+    type is the follow-up that makes the O(nk) reads real.
+    """
+    name = "pallas_fm"
+    caps = Capabilities(full=False, decode=True, causal=True,
+                        bidirectional=True, window=False, rope_protect=False,
+                        mla=False, sparse=True, dense=False,
+                        differentiable=False)
+
+    def decode(self, query: DecodeQuery, cache: SparseKV, lengths, *,
+               scale, window, sfa_k, rope_protect):
+        b, _, h, d = query.q.shape
+        code = sparsify(query.q[:, 0], min(sfa_k, d))        # (b, h, k)
+        kq = code.values.shape[-1]
+        qv = code.values.reshape(b * h, kq)
+        qi = code.indices.reshape(b * h, kq)
+        kv = _fold_expand(cache.k_vals, h)                   # (b*h, n, k)
+        ki = _fold_expand(unpack_indices(cache.k_idx), h)
+        kfeat = to_feature_major(SparseCode(values=kv, indices=ki, dim=d))
+        vf = _fold_expand(cache.v, h).astype(jnp.float32)    # see PallasBackend
+        lens = jnp.repeat(lengths + 1, h)
+        o = flash_sfa_decode_fm(qv, qi, kfeat, vf, lens, scale=scale,
+                                interpret=not _ON_TPU)
+        return o.reshape(b, h, -1)
+
+
+# --------------------------------------------------------------------------
+# registry + selection
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, AttentionBackend] = {}
+
+
+def register_backend(backend: AttentionBackend) -> AttentionBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def backend_names() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def get_backend(name: str) -> AttentionBackend:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown attention backend {name!r}; "
+                         f"registered: {backend_names()}")
+    return _REGISTRY[name]
+
+
+register_backend(XLABackend())
+register_backend(PallasBackend())
+register_backend(PallasFMBackend())
+
+# auto-selection preference: compiled Pallas kernels on TPU; the XLA paths
+# everywhere else (interpret-mode Pallas is a correctness tool, not serving)
+_AUTO_ORDER = ("pallas", "xla") if _ON_TPU else ("xla", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSelection:
+    backend: AttentionBackend
+    requested: str
+    reason: Optional[str] = None     # set when the request fell back
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackReport:
+    """Structured record of a capability-driven backend fallback."""
+    requested: str
+    selected: str
+    reason: str
+    request: AttentionRequest
+    where: str = ""
+
+
+_FALLBACKS: dict = {}
+
+
+def fallback_reports() -> tuple:
+    """All deduped fallbacks observed since the last clear (trace-time:
+    one per distinct (backend, request, site), not per step)."""
+    return tuple(_FALLBACKS.values())
+
+
+def clear_fallback_reports() -> None:
+    _FALLBACKS.clear()
+
+
+def select_backend(name: str, req: AttentionRequest, *,
+                   where: str = "") -> BackendSelection:
+    """Resolve a backend name (or "auto") against a request.
+
+    An explicitly requested backend that cannot serve the request falls
+    back to the ``xla`` oracle and the reason is recorded exactly once per
+    (name, request, site) — the single surfacing point for what the old
+    code spread across trace-time ``warnings.warn`` calls.
+    """
+    if name == "auto":
+        for nm in _AUTO_ORDER:
+            b = _REGISTRY.get(nm)
+            if b is not None and b.unsupported_reason(req) is None:
+                return BackendSelection(b, "auto")
+        return BackendSelection(get_backend("xla"), "auto")
+    backend = get_backend(name)
+    reason = backend.unsupported_reason(req)
+    if reason is None:
+        return BackendSelection(backend, name)
+    fallback = get_backend("xla")
+    key = (name, req, where)
+    if key not in _FALLBACKS:
+        _FALLBACKS[key] = FallbackReport(requested=name, selected=fallback.name,
+                                         reason=reason, request=req,
+                                         where=where)
+        _LOG.warning(
+            "attention backend fallback: requested=%r -> %r (%s) "
+            "[mode=%s%s] — %s-vs-%s comparisons on this config are void",
+            name, fallback.name, reason, req.mode,
+            f", at {where}" if where else "", name, fallback.name)
+    return BackendSelection(fallback, name, reason)

@@ -11,10 +11,13 @@ Heterogeneous depth patterns become *segments* of scan-compatible blocks:
   ssm (rwkv6)      -> [("rwkv", L)]
 
 Modes: "train" (loss), "prefill" (logits + caches), "decode" (one token).
+Decode caches are typed ``KVCache`` pytrees (repro/core/kv_cache.py); the
+attention execution path per mode is resolved through the backend registry
+(repro/models/backends.py) from ``cfg.attention.backend`` /
+``cfg.attention.decode_backend``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

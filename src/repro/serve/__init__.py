@@ -2,8 +2,10 @@ from repro.serve.engine import DecodeEngine, EngineConfig
 from repro.serve.kv_cache import (
     cache_bytes_per_token, cache_stats, CacheStats, memory_ratio_appendix_j,
     pack_indices, unpack_indices, sparse_k_bytes, dense_k_bytes,
+    realized_cache_bytes_per_token, cache_nbytes,
 )
 
 __all__ = ["DecodeEngine", "EngineConfig", "cache_bytes_per_token",
            "cache_stats", "CacheStats", "memory_ratio_appendix_j",
-           "pack_indices", "unpack_indices", "sparse_k_bytes", "dense_k_bytes"]
+           "pack_indices", "unpack_indices", "sparse_k_bytes",
+           "dense_k_bytes", "realized_cache_bytes_per_token", "cache_nbytes"]

@@ -1,4 +1,4 @@
-"""Batched decode engine: slots, prefill→decode handoff, sparse KV caches.
+"""Batched decode engine: slots, prefill→decode handoff, typed KV caches.
 
 Continuous-batching-lite: a fixed number of slots; requests prefill
 individually (batch-1 prefill, realistic for latency-bound serving) and are
@@ -6,6 +6,15 @@ inserted into a slot of the batched decode cache; every ``step()`` decodes
 one token for all live slots. Greedy or temperature sampling; slots free on
 EOS/max_tokens. The decode step is a single jitted function over the full
 slot batch — the shape the decode_32k/long_500k dry-run cells lower.
+
+Caches are typed ``KVCache`` pytrees (repro/core/kv_cache.py): slot
+insertion dispatches on the cache type's structural token axis instead of
+shape-sniffing, and ``EngineConfig.decode_backend`` selects the serving
+attention kernel through the backend registry (``"pallas"`` =
+token-major ``flash_sfa_decode``, ``"pallas_fm"`` = feature-major,
+``"xla"`` = the gather oracle). Slot lengths live host-side (NumPy): the
+decode step reads them as device inputs, but per-slot bookkeeping never
+forces a device→host sync.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.kv_cache import KVCache
 from repro.models import decode_step, init_decode_caches, prefill
 
 
@@ -40,15 +50,23 @@ class EngineConfig:
     eos_id: int = -1                 # -1: never stop on token
     temperature: float = 0.0         # 0 = greedy
     seed: int = 0
+    # None = use cfg.attention.decode_backend; else override per engine
+    # ("xla" | "pallas" | "pallas_fm" | "auto")
+    decode_backend: Optional[str] = None
 
 
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig):
+        if ecfg.decode_backend is not None and cfg.attention is not None:
+            cfg = dataclasses.replace(cfg, attention=dataclasses.replace(
+                cfg.attention, decode_backend=ecfg.decode_backend))
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.caches = init_decode_caches(cfg, ecfg.max_slots, ecfg.max_len)
-        self.lengths = jnp.zeros((ecfg.max_slots,), jnp.int32)
+        # host-side slot lengths: per-slot bookkeeping (EOS/max_len checks)
+        # must not force a device→host transfer every step
+        self.lengths = np.zeros((ecfg.max_slots,), np.int32)
         self.last_token = jnp.zeros((ecfg.max_slots,), jnp.int32)
         self.live = np.zeros((ecfg.max_slots,), bool)
         self.outputs: list[list[int]] = [[] for _ in range(ecfg.max_slots)]
@@ -57,23 +75,25 @@ class DecodeEngine:
         self._prefill, self._decode = _jitted_fns(cfg)
 
     # ------------------------------------------------------------------
-    def _insert_cache(self, slot: int, one_caches, prompt_len: int):
-        """Insert a batch-1 prefill cache (length n) into the slot of the
-        batched cache (length max_len)."""
+    def _insert_cache(self, slot: int, one_caches):
+        """Insert a batch-1 prefill cache into the slot of the batched
+        cache. KVCache nodes know their token axis (insert_slot pads it to
+        max_len from the source's own length); SSM recurrent states have no
+        length axis and land with a plain slot update."""
+        max_len = self.ecfg.max_len
+
         def ins(dst, src):
+            if isinstance(dst, KVCache):
+                return dst.insert_slot(src, slot=slot, max_len=max_len)
             if src is None:
                 return dst
-            # dst: (L, B, ...); src: (L, 1, ...) — length axis (if any) is
-            # axis 2 with size prompt_len, padded into max_len.
-            if (src.ndim >= 3 and src.shape[2] == prompt_len
-                    and dst.shape[2] == self.ecfg.max_len):
-                pad = [(0, 0)] * src.ndim
-                pad[2] = (0, self.ecfg.max_len - prompt_len)
-                src = jnp.pad(src, pad)
             start = (0, slot) + (0,) * (src.ndim - 2)
             return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
                                                 start)
-        self.caches = jax.tree.map(ins, self.caches, one_caches)
+
+        self.caches = jax.tree.map(
+            ins, self.caches, one_caches,
+            is_leaf=lambda x: isinstance(x, KVCache))
 
     def add_request(self, prompt: np.ndarray, max_new_tokens: int = 32,
                     extra_inputs: Optional[dict] = None) -> int:
@@ -90,9 +110,9 @@ class DecodeEngine:
         if self.cfg.frontend is not None and self.cfg.frontend.kind == "patch" \
                 and extra_inputs and "patches" in extra_inputs:
             n += self.cfg.frontend.prefix_len
-        self._insert_cache(slot, one_caches, n)
+        self._insert_cache(slot, one_caches)
         tok = self._sample(logits)
-        self.lengths = self.lengths.at[slot].set(n)
+        self.lengths[slot] = n
         self.last_token = self.last_token.at[slot].set(int(tok[0]))
         self.outputs[slot] = [int(tok[0])]
         self.budgets[slot] = max_new_tokens - 1
@@ -112,7 +132,8 @@ class DecodeEngine:
             return {}
         live_before = self.live.copy()
         logits, self.caches = self._decode(self.params, self.last_token,
-                                           self.caches, self.lengths)
+                                           self.caches,
+                                           jnp.asarray(self.lengths))
         toks = self._sample(logits)
         out = {}
         for slot in np.where(live_before)[0]:
@@ -123,8 +144,8 @@ class DecodeEngine:
             if (t == self.ecfg.eos_id or self.budgets[slot] <= 0 or
                     int(self.lengths[slot]) + 1 >= self.ecfg.max_len):
                 self.live[slot] = False
-        # every slot that decoded gained one cache entry
-        self.lengths = self.lengths + jnp.asarray(live_before, jnp.int32)
+        # every slot that decoded gained one cache entry (host-side update)
+        self.lengths = self.lengths + live_before.astype(np.int32)
         self.last_token = toks
         return out
 

@@ -1,37 +1,32 @@
-"""Sparse KV-cache utilities: at-rest packing + memory accounting.
+"""Sparse KV-cache accounting: at-rest packing + memory models.
 
-The compute path keeps indices int32 (TPU-native); *at rest* the cache packs
-them to int16 (d ≤ 65535 per the paper §3.2) or int8 (d ≤ 256 — every
-assigned arch), which is what realizes Appendix J's ratio
-``2d/(3k+4)`` for the K half of the cache. ``cache_bytes`` reproduces the
-paper's Figure 5 memory curves analytically and is asserted against the
-formula in tests.
+The typed cache pytrees and the index packing live in
+``repro.core.kv_cache`` (the compute path keeps indices int32, TPU-native;
+*at rest* the ``SparseKV`` cache stores them uint8 for d ≤ 256 — every
+assigned arch — or uint16 for d ≤ 65535 per the paper §3.2), which is what
+realizes Appendix J's ratio ``2d/(3k+4)`` for the K half of the cache.
+
+This module is the byte accounting on top: ``cache_bytes_per_token``
+reproduces the paper's Figure 5 memory curves analytically, and
+``realized_cache_bytes_per_token`` measures the *actual* typed cache a
+config allocates (via ``jax.eval_shape`` — zero allocation); tests assert
+the two agree for the packed GQA layouts.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ModelConfig
+from repro.core.kv_cache import (
+    cache_nbytes, idx_bytes, pack_indices, unpack_indices,
+)
 
-
-def pack_indices(idx: jax.Array, d: int) -> jax.Array:
-    if d <= 256:
-        return idx.astype(jnp.uint8)
-    if d <= 65_536:
-        return idx.astype(jnp.uint16)
-    return idx.astype(jnp.int32)
-
-
-def unpack_indices(idx: jax.Array) -> jax.Array:
-    return idx.astype(jnp.int32)
-
-
-def idx_bytes(d: int) -> int:
-    return 1 if d <= 256 else (2 if d <= 65_536 else 4)
+__all__ = [
+    "cache_nbytes", "idx_bytes", "pack_indices", "unpack_indices",
+    "sparse_k_bytes", "dense_k_bytes", "cache_bytes_per_token",
+    "realized_cache_bytes_per_token", "memory_ratio_appendix_j",
+    "CacheStats", "cache_stats",
+]
 
 
 def sparse_k_bytes(n: int, k: int, d: int, *, val_bytes: int = 2,
@@ -66,6 +61,26 @@ def cache_bytes_per_token(cfg: ModelConfig) -> dict:
         k_part = hkv * (a.sfa_k * (2 + idx_bytes(hd)) + p * 2)
         sfa = k_part + hkv * hd * 2              # sparse K + dense V
     return {"dense": dense * cfg.num_layers, "sfa": sfa * cfg.num_layers}
+
+
+def realized_cache_bytes_per_token(cfg: ModelConfig, *, max_len: int = 128,
+                                   batch: int = 1) -> float:
+    """Measured per-token bytes of the typed decode cache a config actually
+    allocates (KVCache leaves only — SSM states are not KV). Uses
+    ``jax.eval_shape``, so no memory is touched.
+
+    For GQA ``SparseKV`` this equals ``cache_bytes_per_token(cfg)["sfa"]``
+    exactly (uint8-packed indices). The MLA+SFA XLA-proxy cache stores the
+    sparsified latent in dense layout for SPMD (see MLASparseKV), so its
+    realized bytes exceed the analytic packed model until a packed MLA
+    layout ships.
+    """
+    import jax
+
+    from repro.models import init_decode_caches
+
+    caches = jax.eval_shape(lambda: init_decode_caches(cfg, batch, max_len))
+    return cache_nbytes(caches) / (batch * max_len)
 
 
 def memory_ratio_appendix_j(d: int, k: int) -> float:

@@ -6,15 +6,15 @@ with optional microbatch gradient accumulation (lax.scan over microbatches —
 constant memory in accumulation steps) and optional top-k gradient
 compression with error feedback before the DP mean.
 
-``attn_impl`` overrides ``cfg.attention.impl`` for the whole step —
-``attn_impl="pallas"`` trains through the Pallas FlashSFA forward AND
-backward kernels (fwd+bwd speedups measured end-to-end, see
-benchmarks/bench_pretrain.py), ``"xla"`` forces the pure-JAX path.
+``attn_backend`` overrides ``cfg.attention.backend`` (a registry name from
+repro/models/backends.py) for the whole step — ``attn_backend="pallas"``
+trains through the Pallas FlashSFA forward AND backward kernels (fwd+bwd
+speedups measured end-to-end, see benchmarks/bench_pretrain.py), ``"xla"``
+forces the pure-JAX path.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -26,18 +26,19 @@ from repro.models import loss_fn
 from repro.optim import OptimizerConfig, make_optimizer
 
 
-def _override_attn_impl(cfg: ModelConfig, attn_impl: Optional[str]):
-    if attn_impl is None or cfg.attention is None:
+def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str]):
+    if attn_backend is None or cfg.attention is None:
         return cfg
     return dataclasses.replace(
-        cfg, attention=dataclasses.replace(cfg.attention, impl=attn_impl))
+        cfg, attention=dataclasses.replace(cfg.attention,
+                                           backend=attn_backend))
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                     accum_steps: int = 1,
                     grad_compression: Optional[float] = None,
-                    attn_impl: Optional[str] = None):
-    cfg = _override_attn_impl(cfg, attn_impl)
+                    attn_backend: Optional[str] = None):
+    cfg = _override_attn_backend(cfg, attn_backend)
     update = make_optimizer(opt_cfg)
 
     def compute_grads(params, batch):
@@ -75,8 +76,8 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     return step
 
 
-def make_eval_step(cfg: ModelConfig, *, attn_impl: Optional[str] = None):
-    cfg = _override_attn_impl(cfg, attn_impl)
+def make_eval_step(cfg: ModelConfig, *, attn_backend: Optional[str] = None):
+    cfg = _override_attn_backend(cfg, attn_backend)
 
     def step(params, batch):
         loss, metrics = loss_fn(params, batch, cfg)

@@ -2,12 +2,10 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data import DataConfig, markov_batch, copy_batch
@@ -26,9 +24,10 @@ class TrainerConfig:
     accum_steps: int = 1
     grad_compression: Optional[float] = None
     data_kind: str = "markov"
-    # None = use cfg.attention.impl; "pallas" = train fwd+bwd through the
-    # Pallas kernels; "xla" = force the pure-JAX path.
-    attn_impl: Optional[str] = None
+    # None = use cfg.attention.backend; "pallas" = train fwd+bwd through the
+    # Pallas kernels; "xla" = force the pure-JAX path (registry names,
+    # repro/models/backends.py).
+    attn_backend: Optional[str] = None
     ft: FTConfig = dataclasses.field(default_factory=FTConfig)
 
 
@@ -47,7 +46,7 @@ class Trainer:
         self.step_fn = jax.jit(make_train_step(
             cfg, opt_cfg, accum_steps=tcfg.accum_steps,
             grad_compression=tcfg.grad_compression,
-            attn_impl=tcfg.attn_impl))
+            attn_backend=tcfg.attn_backend))
         self._batch_fn = (markov_batch if tcfg.data_kind == "markov"
                           else copy_batch)
 

@@ -13,11 +13,10 @@ up in the byte model (sparse Q/K/cache IO), exactly matching the kernels.
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.model import segments
-from repro.serve.kv_cache import cache_bytes_per_token, idx_bytes
+from repro.serve.kv_cache import cache_bytes_per_token
 
 MOE_GROUP = 1024  # must match models.moe group_size default at scale
 

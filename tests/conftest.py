@@ -4,7 +4,6 @@ import os
 # dry-run scripts force 512 placeholder devices (per assignment).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import numpy as np
 import pytest
 
 

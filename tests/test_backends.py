@@ -1,0 +1,93 @@
+"""Attention-backend registry tests (repro/models/backends.py): capability
+flags, explicit vs auto selection, and structured fallback reporting — the
+replacement for the old silent ``use_pallas`` predicate + trace-time
+warnings."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import backends as B
+from repro.models import forward_logits, init as model_init
+
+
+def _req(**kw):
+    base = dict(mode="full", causal=True, window=False, rope_protect=False,
+                mla=False, sparse=True)
+    base.update(kw)
+    return B.AttentionRequest(**base)
+
+
+def test_registry_names_and_unknown():
+    assert {"xla", "pallas", "pallas_fm"} <= set(B.backend_names())
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        B.get_backend("cuda")
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        B.select_backend("nope", _req())
+
+
+def test_capability_flags():
+    xla = B.get_backend("xla")
+    pal = B.get_backend("pallas")
+    fm = B.get_backend("pallas_fm")
+    assert xla.caps.window and xla.caps.rope_protect and xla.caps.mla
+    assert xla.caps.full and xla.caps.decode and xla.caps.differentiable
+    assert pal.caps.full and pal.caps.decode and pal.caps.differentiable
+    assert not (pal.caps.window or pal.caps.rope_protect or pal.caps.mla)
+    assert fm.caps.decode and not fm.caps.full
+
+
+def test_explicit_selection_and_auto_on_cpu():
+    sel = B.select_backend("pallas", _req())
+    assert sel.backend.name == "pallas" and sel.reason is None
+    # auto never picks interpret-mode Pallas off-TPU
+    assert B.select_backend("auto", _req()).backend.name == "xla"
+
+
+def test_windowed_fallback_reported_and_deduped():
+    B.clear_fallback_reports()
+    sel = B.select_backend("pallas", _req(window=True), where="test/window")
+    assert sel.backend.name == "xla" and sel.requested == "pallas"
+    assert "window" in sel.reason
+    n = len(B.fallback_reports())
+    assert n == 1
+    B.select_backend("pallas", _req(window=True), where="test/window")
+    assert len(B.fallback_reports()) == n       # same site: deduped
+
+
+def test_capability_fallback_reasons():
+    assert "rope_protect" in B.select_backend(
+        "pallas", _req(rope_protect=True)).reason
+    assert "MLA" in B.select_backend("pallas", _req(mla=True)).reason
+    assert "dense" in B.select_backend(
+        "pallas", _req(mode="decode", sparse=False)).reason
+    assert "full-sequence" in B.select_backend(
+        "pallas_fm", _req(mode="full")).reason
+
+
+def test_windowed_model_reports_fallback(rng):
+    """gemma3 (sliding windows) with backend="pallas" runs on the XLA path
+    and surfaces a structured report — not a warning."""
+    B.clear_fallback_reports()
+    cfg = get_config("gemma3-4b").reduced()
+    cfg = dataclasses.replace(cfg, attention=dataclasses.replace(
+        cfg.attention, backend="pallas"))
+    params = model_init(rng, cfg)
+    out = forward_logits(params, {"tokens": jnp.zeros((1, 8), jnp.int32)}, cfg)
+    assert np.isfinite(np.asarray(out.logits)).all()
+    assert any(r.requested == "pallas" and "window" in r.reason
+               for r in B.fallback_reports())
+
+
+def test_rope_protected_model_reports_fallback(rng):
+    B.clear_fallback_reports()
+    cfg = get_config("gpt2-small-sfa8").reduced()
+    cfg = dataclasses.replace(cfg, attention=dataclasses.replace(
+        cfg.attention, backend="pallas", sfa_rope_protect=4))
+    params = model_init(rng, cfg)
+    out = forward_logits(params, {"tokens": jnp.zeros((1, 8), jnp.int32)}, cfg)
+    assert np.isfinite(np.asarray(out.logits)).all()
+    assert any(r.requested == "pallas" and "rope_protect" in r.reason
+               for r in B.fallback_reports())

@@ -43,6 +43,23 @@ def test_input_specs_all_cells_no_allocation():
                 assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, shape)
 
 
+def test_cache_specs_cover_typed_caches():
+    """cache_specs dispatches on the typed KVCache token axis (no max_len
+    sniffing) and yields one PartitionSpec per cache leaf, SSM states
+    included."""
+    from repro.models import init_decode_caches
+    mesh = make_debug_mesh(model=1)
+    for arch in ("gpt2-small-sfa8", "deepseek-v2-236b", "jamba-v0.1-52b",
+                 "rwkv6-3b"):
+        cfg = get_config(arch)
+        caches = jax.eval_shape(lambda c=cfg: init_decode_caches(c, 8, 64))
+        specs = S.cache_specs(caches, cfg, mesh, batch=8, max_len=64)
+        n_c = len(jax.tree_util.tree_leaves(caches))
+        n_s = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_c == n_s, arch
+
+
 def test_skip_matrix_is_40_cells():
     run = skip = 0
     for arch in ASSIGNED_ARCHS:

@@ -122,6 +122,62 @@ def test_prefill_decode_handoff_matches_full_forward(dense_setup):
     assert out == oracle
 
 
+@pytest.fixture(scope="module")
+def sfa_setup():
+    cfg = _cfg("gpt2-small-sfa8")
+    assert cfg.attention.sfa_k is not None
+    params = model_init(jax.random.PRNGKey(2), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("backend", [
+    "pallas",
+    # feature-major interpret-mode kernel is ~45 s on CPU: slow lane only
+    pytest.param("pallas_fm", marks=pytest.mark.slow),
+])
+def test_decode_backend_parity_full_engine(sfa_setup, backend):
+    """flash_sfa_decode / flash_sfa_decode_fm selected as serving backends
+    through the registry produce greedy tokens identical to the XLA gather
+    oracle over >=32 decode steps with ragged slot lengths."""
+    cfg, params = sfa_setup
+    prompts = [np.array([1, 2, 3], np.int64), np.array([4, 5, 6, 7], np.int64)]
+    outs = {}
+    for be in ("xla", backend):
+        eng = _engine(cfg, params, max_len=48, decode_backend=be)
+        s0 = eng.add_request(prompts[0], max_new_tokens=33)
+        s1 = eng.add_request(prompts[1], max_new_tokens=33)
+        while eng.live.any():
+            eng.step()
+        assert len(eng.outputs[s0]) == 33       # 1 prefill + 32 decode steps
+        outs[be] = (eng.outputs[s0], eng.outputs[s1])
+    assert outs[backend] == outs["xla"]
+
+
+def test_dense_cache_pallas_request_falls_back(dense_setup):
+    """Dense caches have no Pallas decode kernel: an explicit request runs
+    on the oracle and surfaces a structured report (no silent divergence)."""
+    from repro.models import backends as B
+    cfg, params = dense_setup
+    B.clear_fallback_reports()
+    ref = _engine(cfg, params).generate(np.array([1, 2, 3], np.int64),
+                                        max_new_tokens=6)
+    out = _engine(cfg, params, decode_backend="pallas").generate(
+        np.array([1, 2, 3], np.int64), max_new_tokens=6)
+    assert out == ref
+    assert any(r.requested == "pallas" and "dense" in r.reason
+               for r in B.fallback_reports())
+
+
+def test_slot_lengths_stay_on_host(dense_setup):
+    """Per-slot length bookkeeping must not sync the device every step."""
+    cfg, params = dense_setup
+    eng = _engine(cfg, params)
+    eng.add_request(np.array([1, 2, 3], np.int64), max_new_tokens=3)
+    assert isinstance(eng.lengths, np.ndarray)
+    eng.step()
+    assert isinstance(eng.lengths, np.ndarray)
+
+
 def test_sfa_sparse_cache_handoff():
     """Same lifecycle checks through the SFA sparse-KV cache path."""
     cfg = _cfg("gpt2-small-sfa8")

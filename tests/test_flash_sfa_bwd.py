@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
-    flash_attention, flash_attention_bwd, flash_sfa, flash_sfa_bwd,
+    flash_attention, flash_sfa, flash_sfa_bwd,
     sfa_attention_op, dense_attention_op,
 )
 from repro.kernels import ref as REF

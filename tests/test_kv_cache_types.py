@@ -1,0 +1,102 @@
+"""Typed KVCache tests (repro/core/kv_cache.py): packed at-rest indices,
+realized-vs-analytic bytes per token, write/insert semantics, and pytree
+registration (the engine and launch specs rely on these invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.kv_cache import (
+    DenseKV, MLASparseKV, SparseKV, idx_dtype, pack_indices, unpack_indices,
+)
+from repro.models.attention import init_cache
+from repro.serve.kv_cache import (cache_bytes_per_token,
+                                  realized_cache_bytes_per_token)
+
+
+def test_pack_unpack_roundtrip():
+    idx = jnp.array([[0, 3, 255]], jnp.int32)
+    p8 = pack_indices(idx, 256)
+    assert p8.dtype == jnp.uint8
+    assert (unpack_indices(p8) == idx).all()
+    p16 = pack_indices(jnp.array([[300]], jnp.int32), 1024)
+    assert p16.dtype == jnp.uint16
+    assert int(unpack_indices(p16)[0, 0]) == 300
+    assert idx_dtype(65_537) == jnp.int32
+
+
+def test_init_cache_types_and_packed_idx():
+    c = init_cache(get_config("gpt2-small-sfa8").reduced(), 2, 16)
+    assert isinstance(c, SparseKV)
+    assert c.k_idx.dtype == jnp.uint8            # head_dim <= 256
+    assert c.k_protect is None
+    assert isinstance(init_cache(get_config("gpt2-small").reduced(), 2, 16),
+                      DenseKV)
+    assert isinstance(
+        init_cache(get_config("deepseek-v2-236b").reduced(), 2, 16),
+        MLASparseKV)
+
+
+def test_write_packs_indices_and_roundtrips():
+    cfg = get_config("gpt2-small-sfa8").reduced()
+    a = cfg.attention
+    c = init_cache(cfg, 2, 8, dtype=jnp.float32)
+    kk = c.k_vals.shape[-1]
+    hkv = a.num_kv_heads
+    vals = jnp.arange(2 * hkv * kk, dtype=jnp.float32).reshape(2, 1, hkv, kk)
+    idx = jnp.tile(jnp.arange(kk, dtype=jnp.int32), (2, 1, hkv, 1))
+    v = jnp.ones((2, 1, hkv, a.head_dim), jnp.float32)
+    pos = jnp.array([0, 3], jnp.int32)           # ragged positions
+    c2 = c.write(pos, k_vals=vals, k_idx=idx, v=v, k_protect=None)
+    assert c2.k_idx.dtype == jnp.uint8           # packed on write
+    assert (unpack_indices(c2.k_idx)[0, 0] == idx[0, 0]).all()
+    assert (unpack_indices(c2.k_idx)[1, 3] == idx[1, 0]).all()
+    assert (c2.k_vals[1, 3] == vals[1, 0]).all()
+    assert (c2.k_vals[1, 0] == 0).all()          # other rows untouched
+    # original cache unmodified (functional update)
+    assert (c.k_vals == 0).all()
+
+
+def test_insert_slot_structural_token_axis():
+    cfg = get_config("gpt2-small-sfa8").reduced()
+    dst = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[init_cache(cfg, 4, 16, jnp.float32)] * 2)
+    n = 5
+    src_one = init_cache(cfg, 1, n, jnp.float32)
+    src = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[SparseKV(k_vals=src_one.k_vals + 7.0,
+                                  k_idx=src_one.k_idx,
+                                  v=src_one.v + 3.0,
+                                  k_protect=None)] * 2)
+    out = dst.insert_slot(src, slot=2, max_len=16)
+    assert isinstance(out, SparseKV)
+    assert (np.asarray(out.k_vals[:, 2, :n]) == 7.0).all()
+    assert (np.asarray(out.k_vals[:, 2, n:]) == 0.0).all()  # padded tail
+    assert (np.asarray(out.v[:, 2, :n]) == 3.0).all()
+    assert (np.asarray(out.k_vals[:, 0]) == 0.0).all()      # other slots
+
+
+def test_realized_bytes_match_formula_for_packed_gqa():
+    """The satellite assertion: the typed caches actually allocated realize
+    exactly cache_bytes_per_token (uint8-packed indices) for GQA layouts."""
+    for name in ("gpt2-small", "gpt2-small-sfa8", "qwen3-0.6b-sfa16"):
+        cfg = get_config(name)
+        a = cfg.attention
+        key = "sfa" if a.sfa_k is not None else "dense"
+        analytic = cache_bytes_per_token(cfg)[key]
+        realized = realized_cache_bytes_per_token(cfg, max_len=64)
+        assert realized == analytic, (name, realized, analytic)
+    # MLA+SFA XLA-proxy keeps the sparse latent in dense layout: strictly
+    # more bytes than the packed analytic model (gap reported, not hidden)
+    mla = get_config("deepseek-v2-236b")
+    assert realized_cache_bytes_per_token(mla, max_len=64) > \
+        cache_bytes_per_token(mla)["sfa"]
+
+
+def test_registered_pytree_roundtrip():
+    c = init_cache(get_config("gpt2-small-sfa8").reduced(), 1, 4)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), c, c)
+    assert isinstance(stacked, SparseKV)
+    assert stacked.k_vals.shape[0] == 2
+    leaves, treedef = jax.tree_util.tree_flatten(c)
+    assert isinstance(jax.tree_util.tree_unflatten(treedef, leaves), SparseKV)

@@ -15,7 +15,7 @@ import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import (
-    init, loss_fn, forward_logits, prefill, decode_step, init_decode_caches,
+    init, loss_fn, forward_logits, decode_step, init_decode_caches,
 )
 
 # Family representatives kept in the fast loop, per test kind. Everything

@@ -12,8 +12,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import sparsify, densify, topk_mask, topk_st, memory_ratio
-from repro.core.sparse import SparseCode, to_feature_major
+from repro.core import sparsify, densify, topk_mask, topk_st
+from repro.core.sparse import to_feature_major
 from repro.serve.kv_cache import memory_ratio_appendix_j, sparse_k_bytes, \
     dense_k_bytes
 

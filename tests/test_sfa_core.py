@@ -8,7 +8,6 @@ from repro.core import (
     sparsify, densify, topk_mask, topk_st, intersect_score, memory_ratio,
     dense_attention_ref, chunked_attention, sfa_attention, decode_attention,
 )
-from repro.core.sparse import SparseCode
 
 
 def test_topk_mask_matches_lax_topk(rng):

@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, data, checkpointing, fault tolerance,
 gradient compression, serving engine."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ import pytest
 from repro.configs import get_config
 from repro.data import DataConfig, markov_batch, copy_batch, niah_batch
 from repro.optim import (OptimizerConfig, init_opt_state, adamw_update,
-                         lion_update, schedule_lr, global_norm)
+                         lion_update, schedule_lr)
 from repro.train import checkpoint as ckpt
 from repro.train import Trainer, TrainerConfig, FTConfig
 from repro.train.fault_tolerance import StragglerMonitor
