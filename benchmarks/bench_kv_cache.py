@@ -7,12 +7,16 @@ asserted to agree. Decode roofline time uses v5e HBM bandwidth.
 
 The ``kvreal_*`` rows measure the *typed* decode caches a config actually
 allocates (core/kv_cache.py, via jax.eval_shape — zero allocation) against
-the analytic model: for GQA ``SparseKV`` the uint8-packed indices make the
-two identical; the MLA+SFA XLA-proxy layout (dense-layout sparse latent, see
-MLASparseKV) is reported with its realized overhead so the gap to the packed
-model stays visible.
+the analytic model, and now ASSERT realized == analytic for every layout:
+packed GQA ``SparseKV`` (uint8 indices), the persistent ``FeatureMajorKV``
+image a pallas_fm decode backend allocates (dense-K bytes at rest — the
+capacity the layout spends to make O(nk) decode reads real), and the packed
+``MLASparseKV`` sparse latent (the old dense-layout proxy and its ~1.8×
+reported gap are gone).
 """
 from __future__ import annotations
+
+import dataclasses
 
 from repro.configs import get_config
 from repro.serve.kv_cache import (cache_bytes_per_token, sparse_k_bytes,
@@ -46,15 +50,30 @@ def run(quick: bool = True):
                          f"saving={1 - sfa_gb / dense_gb:.1%};"
                          f"decode_ms_dense={t_dense:.2f};"
                          f"decode_ms_sfa={t_sfa:.2f}"))
-    # analytic model vs the typed caches actually allocated (eval_shape)
-    for arch in ("gpt2-small", "gpt2-small-sfa8", "qwen3-0.6b-sfa16",
-                 "deepseek-v2-236b"):
+    # analytic model vs the typed caches actually allocated (eval_shape);
+    # realized == analytic is ASSERTED — the whole point of the packed /
+    # persistent layouts is that the at-rest bytes match the formula exactly
+    cells = [(arch, None) for arch in
+             ("gpt2-small", "gpt2-small-sfa8", "qwen3-0.6b-sfa16",
+              "deepseek-v2-236b")]
+    # the persistent feature-major image the pallas_fm backend allocates
+    cells.append(("gpt2-small-sfa8", "pallas_fm"))
+    for arch, decode_backend in cells:
         cfg = get_config(arch)
         a = cfg.attention
-        analytic = cache_bytes_per_token(cfg)[
-            "sfa" if a is not None and a.sfa_k is not None else "dense"]
+        tag = arch
+        if decode_backend is not None:
+            cfg = dataclasses.replace(cfg, attention=dataclasses.replace(
+                a, decode_backend=decode_backend))
+            a = cfg.attention
+            tag = f"{arch}_{decode_backend}"
+        key = "dense" if a is None or a.sfa_k is None else (
+            "fm" if decode_backend == "pallas_fm" else "sfa")
+        analytic = cache_bytes_per_token(cfg)[key]
         realized = realized_cache_bytes_per_token(cfg, max_len=128)
-        rows.append((f"kvreal_{arch}", 0.0,
-                     f"analytic_B={analytic};realized_B={realized:.0f};"
+        assert realized == analytic, (tag, realized, analytic)
+        rows.append((f"kvreal_{tag}", 0.0,
+                     f"layout={key};analytic_B={analytic};"
+                     f"realized_B={realized:.0f};"
                      f"realized_over_analytic={realized / max(analytic, 1):.3f}"))
     return rows

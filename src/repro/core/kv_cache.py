@@ -1,48 +1,63 @@
 """Typed KV-cache pytrees — the serving-side data structures.
 
-Every decode cache in the repo is one of four registered-dataclass pytrees
+Every decode cache in the repo is one of five registered-dataclass pytrees
 (replacing the four ad-hoc dict schemas that used to live in
 ``models/attention.py`` and force shape-sniffing in the engine):
 
-  * ``DenseKV``     — dense K/V, the baseline layout.
-  * ``SparseKV``    — SFA layout: top-k K values + *packed* indices (uint8
-                      for d ≤ 256, uint16 for d ≤ 65536 — what realizes the
-                      paper's Appendix-J ratio ≈ 2d/(3k+4) on the K half),
-                      dense V, and optionally the protected leading RoPE
-                      dims stored dense (paper A.1).
-  * ``MLAKV``       — DeepSeek-V2 latent cache: shared c_kv + k_pe.
-  * ``MLASparseKV`` — MLA + SFA: adds the sparsified latent in *dense
-                      layout* (zeros off-support). Head-independent
-                      per-token codes make per-head gather-scoring
-                      pathological under SPMD (measured 7.6 TB/step of
-                      involuntary gathers — EXPERIMENTS.md §Perf i2); the
-                      dense-layout einsum is mathematically identical and
-                      shards trivially.
+  * ``DenseKV``        — dense K/V, the baseline layout.
+  * ``SparseKV``       — SFA layout: top-k K values + *packed* indices
+                         (uint8 for d ≤ 256, uint16 for d ≤ 65536 — what
+                         realizes the paper's Appendix-J ratio ≈ 2d/(3k+4)
+                         on the K half), dense V, and optionally the
+                         protected leading RoPE dims stored dense (A.1).
+  * ``FeatureMajorKV`` — beyond-paper serving layout for the ``pallas_fm``
+                         decode backend: a *persistent* dense ``(d, n)``
+                         feature-major K image, maintained incrementally by
+                         ``write``/``insert_slot`` (one column scatter per
+                         decoded token), so the kernel streams the k feature
+                         rows its sparse query addresses straight from HBM —
+                         zero per-step re-materialization. Trades cache
+                         capacity (dense-K bytes at rest) for decode
+                         bandwidth + FLOPs (DESIGN.md §2).
+  * ``MLAKV``          — DeepSeek-V2 latent cache: shared c_kv + k_pe.
+  * ``MLASparseKV``    — MLA + SFA: the sparsified latent stored *packed*
+                         on the latent axis (top-k values + uint8/uint16
+                         coordinate ids over the kv_lora_rank dims) — the
+                         paper's Appendix-J packing applied to the latent.
+                         Scoring gathers per *token* (codes are
+                         head-independent), so the SPMD per-head gather
+                         pathology that forced the old dense-layout proxy
+                         (EXPERIMENTS.md §Perf i2) does not apply; the dense
+                         c_kv is kept for the value aggregation.
 
 All types share two structural invariants the engine and launch specs rely
 on (no shape-sniffing anywhere):
 
   * unstacked (model-level) leaves are ``(batch, tokens, ...)`` — the token
-    axis is **1**;
-  * layer-stacked (engine-level) leaves are ``(layers, batch, tokens, ...)``
-    — the token axis is **2** (``STACKED_TOKEN_AXIS``).
+    axis is **1** unless the field overrides it in ``_TOKEN_AXES``
+    (``FeatureMajorKV.k_feat`` keeps tokens *last*: ``(b, hkv, d, n)``);
+  * layer-stacked (engine-level) leaves gain a leading layer axis — the
+    token axis is the unstacked one + 1 (``token_axis(field, stacked=True)``).
 
 ``write`` inserts one decoded token at a (possibly ragged) position;
 ``insert_slot`` pads a batch-1 prefill cache to the engine's ``max_len`` and
-lands it in a slot of the batched cache. Index packing/unpacking helpers
-live here too (re-exported by ``repro.serve.kv_cache`` for the byte
-accounting).
+lands it in a slot of the batched cache (overwriting the whole token axis,
+so slot reuse can never leak a stale feature column). Index
+packing/unpacking helpers live here too (re-exported by
+``repro.serve.kv_cache`` for the byte accounting).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
 
-TOKEN_AXIS = 1          # unstacked: (batch, tokens, ...)
-STACKED_TOKEN_AXIS = 2  # layer-stacked: (layers, batch, tokens, ...)
+from repro.core.sparse import SparseCode, densify
+
+TOKEN_AXIS = 1  # default unstacked token axis: (batch, tokens, ...); the
+                # stacked axis is per-field via KVCache.token_axis(stacked=True)
 
 
 # --------------------------------------------------------------------------
@@ -77,12 +92,24 @@ def unpack_indices(idx: jax.Array) -> jax.Array:
 class KVCache:
     """Base for the typed cache pytrees (all fields are array leaves)."""
 
+    # per-field UNstacked token axis; fields not listed sit at TOKEN_AXIS.
+    # The layout is structural class data, not a tensor property — the
+    # engine, `cache_specs`, and `insert_slot` all dispatch through
+    # ``token_axis`` so no consumer ever sniffs shapes.
+    _TOKEN_AXES: ClassVar[dict] = {}
+
+    @classmethod
+    def token_axis(cls, field: str, *, stacked: bool = False) -> int:
+        ax = cls._TOKEN_AXES.get(field, TOKEN_AXIS)
+        return ax + 1 if stacked else ax
+
     def write(self, pos, **updates) -> "KVCache":
         """Insert one token's entries at position ``pos``.
 
         ``pos`` is a scalar or a (b,)-ragged int32 vector; each update value
-        is ``(b, 1, ...)`` — one new token — and is cast to the stored dtype
-        (int32 indices pack down to the at-rest uint8/uint16 here).
+        carries a singleton token axis (one new token, at this field's
+        structural token axis) and is cast to the stored dtype (int32
+        indices pack down to the at-rest uint8/uint16 here).
         """
         changes = {}
         ragged = jnp.ndim(pos) > 0
@@ -90,36 +117,42 @@ class KVCache:
             if val is None:
                 continue
             arr = getattr(self, name)
+            ax = self.token_axis(name)
             if ragged:
                 changes[name] = jax.vmap(
-                    lambda a_, v_, i_: jax.lax.dynamic_update_slice_in_dim(
-                        a_, v_.astype(a_.dtype), i_, axis=0))(arr, val, pos)
+                    lambda a_, v_, i_, ax=ax: jax.lax.dynamic_update_slice_in_dim(
+                        a_, v_.astype(a_.dtype), i_, axis=ax - 1))(arr, val, pos)
             else:
                 changes[name] = jax.lax.dynamic_update_slice_in_dim(
-                    arr, val.astype(arr.dtype), pos, axis=TOKEN_AXIS)
+                    arr, val.astype(arr.dtype), pos, axis=ax)
         return dataclasses.replace(self, **changes)
 
     def insert_slot(self, src: "KVCache", *, slot: int,
                     max_len: int) -> "KVCache":
         """Land a layer-stacked batch-1 prefill cache in ``slot``.
 
-        ``self`` leaves are ``(L, B, max_len, ...)``; ``src`` leaves are
-        ``(L, 1, n, ...)`` with n = prompt length, padded up to ``max_len``.
-        Token axis is structural (STACKED_TOKEN_AXIS) — no shape-sniffing.
+        ``self`` leaves are ``(L, B, ...)`` with ``max_len`` tokens on each
+        field's structural token axis; ``src`` leaves are ``(L, 1, ...)``
+        with n = prompt length there, padded up to ``max_len``. The whole
+        token axis is written (zero-padded tail), so reusing a freed slot
+        fully overwrites the previous request's entries.
         """
-        ax = STACKED_TOKEN_AXIS
-
-        def one(dst, s):
+        changes = {}
+        for f in dataclasses.fields(self):
+            dst = getattr(self, f.name)
+            s = getattr(src, f.name)
+            if dst is None or s is None:
+                continue
+            ax = self.token_axis(f.name, stacked=True)
             n = s.shape[ax]
             if n != max_len:
                 pad = [(0, 0)] * s.ndim
                 pad[ax] = (0, max_len - n)
                 s = jnp.pad(s, pad)
             start = (0, slot) + (0,) * (s.ndim - 2)
-            return jax.lax.dynamic_update_slice(dst, s.astype(dst.dtype),
-                                                start)
-
-        return jax.tree.map(one, self, src)
+            changes[f.name] = jax.lax.dynamic_update_slice(
+                dst, s.astype(dst.dtype), start)
+        return dataclasses.replace(self, **changes)
 
 
 def _register(cls):
@@ -159,6 +192,42 @@ class SparseKV(KVCache):
 
 @_register
 @dataclasses.dataclass(frozen=True)
+class FeatureMajorKV(KVCache):
+    """Persistent feature-major SFA cache (``pallas_fm`` serving layout).
+
+    k_feat (b, hkv, d, n)  dense feature-major K image — token axis LAST,
+                           exactly the layout ``flash_sfa_decode_fm``
+                           streams, so decode reads feature rows straight
+                           from the cache with no per-step transform
+    v      (b, hkv, n, dv) dense values, ALSO kernel-native (heads-major,
+                           token axis 2) — decode feeds both leaves to the
+                           kernel as flat (b·hkv, ...) views, zero copies
+
+    ``write`` scatters one dense (hkv, d) column per decoded token (the
+    densified top-k code — columns are ≤ k-sparse by construction, which
+    the ``pallas_fm`` debug check re-verifies from the image itself).
+    """
+    k_feat: jax.Array
+    v: jax.Array
+
+    _TOKEN_AXES: ClassVar[dict] = {"k_feat": 3, "v": 2}
+
+    def write(self, pos, *, k_vals, k_idx, v=None, **_ignored) -> "FeatureMajorKV":
+        """Insert one token: densify its (k_vals, k_idx) code into a dense
+        feature column and land it at ``pos`` of the image (plus the V row,
+        re-ordered from the model's token-major (b, 1, hkv, dv) into the
+        kernel-native layout). Accepts and ignores SparseKV-only fields
+        (``k_protect``) so the model's decode write is call-site uniform
+        across layouts."""
+        col = densify(SparseCode(values=k_vals[:, 0],
+                                 indices=unpack_indices(k_idx[:, 0]),
+                                 dim=self.k_feat.shape[-2]))  # (b, hkv, d)
+        return super().write(pos, k_feat=col[..., None],
+                             v=None if v is None else jnp.moveaxis(v, 1, 2))
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
 class MLAKV(KVCache):
     """MLA latent cache: ckv (b, n, r), kpe (b, n, rope_head_dim)."""
     ckv: jax.Array
@@ -168,20 +237,39 @@ class MLAKV(KVCache):
 @_register
 @dataclasses.dataclass(frozen=True)
 class MLASparseKV(KVCache):
-    """MLA + SFA: adds the sparsified latent in dense layout (ckv_sp)."""
+    """MLA + SFA with the sparsified latent *packed* on the latent axis.
+
+    ckv         (b, n, r)  dense latent (value aggregation reads this)
+    kpe         (b, n, dr) dense RoPE part
+    ckv_sp_vals (b, n, k)  top-k latent entries (cache dtype)
+    ckv_sp_idx  (b, n, k)  packed latent coordinate ids (uint8/uint16 at
+                           rest by r; int32 in compute)
+
+    Codes are head-independent (one per token), so scoring is a per-token
+    gather — the per-head SPMD gather pathology that motivated the old
+    dense-layout proxy does not arise, and the at-rest bytes now match the
+    analytic packed model exactly (k·(2 + idx_bytes(r)) on top of MLAKV).
+    """
     ckv: jax.Array
     kpe: jax.Array
-    ckv_sp: jax.Array
+    ckv_sp_vals: jax.Array
+    ckv_sp_idx: jax.Array
+
+
+def kv_cache_nodes(tree) -> list:
+    """All KVCache nodes of a cache pytree, in leaf order (SSM recurrent
+    states and other raw-array leaves are skipped) — the one traversal the
+    byte accounting, launchers, and tests all share."""
+    return [n for n in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, KVCache))
+        if isinstance(n, KVCache)]
 
 
 def cache_nbytes(cache) -> int:
     """Total at-rest bytes of a cache pytree (arrays or ShapeDtypeStructs),
     counting only KVCache leaves (SSM recurrent states are not KV)."""
     total = 0
-    for node in jax.tree.leaves(
-            cache, is_leaf=lambda x: isinstance(x, KVCache)):
-        if not isinstance(node, KVCache):
-            continue
+    for node in kv_cache_nodes(cache):
         for leaf in jax.tree.leaves(node):
             size = 1
             for s in leaf.shape:

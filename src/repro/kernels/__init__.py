@@ -6,6 +6,7 @@ flash_sfa_bwd    — FlashSFA backward (recompute-in-tile, Eq. 6 ST grads)
 flash_attention_bwd — dense FlashAttention backward (same skeleton)
 flash_sfa_decode — token-major sparse-KV decode (paper layout)
 flash_sfa_decode_fm — feature-major decode (beyond-paper layout)
+feature_major_prefill — prefill-write for the persistent FeatureMajorKV image
 flash_attention  — dense FlashAttention baseline (differentiable)
 ops              — jitted wrappers + XLA/Pallas dispatch, custom_vjp training
 ref              — pure-jnp oracles for all of the above
@@ -13,10 +14,12 @@ ref              — pure-jnp oracles for all of the above
 from repro.kernels.rtopk import rtopk
 from repro.kernels.flash_sfa import flash_sfa
 from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, flash_attention_bwd
-from repro.kernels.flash_sfa_decode import flash_sfa_decode, flash_sfa_decode_fm
+from repro.kernels.flash_sfa_decode import (
+    feature_major_prefill, flash_sfa_decode, flash_sfa_decode_fm,
+)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import sfa_attention_op, dense_attention_op
 
 __all__ = ["rtopk", "flash_sfa", "flash_sfa_bwd", "flash_attention_bwd",
-           "flash_sfa_decode", "flash_sfa_decode_fm",
+           "flash_sfa_decode", "flash_sfa_decode_fm", "feature_major_prefill",
            "flash_attention", "sfa_attention_op", "dense_attention_op"]

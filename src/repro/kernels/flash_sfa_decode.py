@@ -14,7 +14,10 @@ Two KV-cache layouts (DESIGN.md §2):
    BlockSpec index map, so only k rows ever leave HBM: O(nk) traffic AND an
    O(nk) MXU contraction (a real k/d FLOP cut with zero scatter). Trades
    cache capacity for bandwidth+FLOPs — benchmarked against layout 1 in
-   EXPERIMENTS.md §Perf.
+   EXPERIMENTS.md §Perf. The image is *persistent* in ``FeatureMajorKV``:
+   ``feature_major_prefill`` below builds it once from the prefill's top-k
+   codes, ``KVCache.write`` extends it one column per decoded token, and the
+   kernel reads it as-is — no per-step re-materialization anywhere.
 
 Both kernels mask by a runtime ``length`` (scalar-prefetched), support
 pre-allocated over-length caches, and use online softmax across sequential
@@ -29,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.sparse import SparseCode, to_feature_major
 from repro.kernels._compat import CompilerParams
 
 NEG_INF = -1e30
@@ -138,6 +142,24 @@ def flash_sfa_decode(q, k_vals, k_idx, v, lengths, *, d: int,
 # Layout 2: feature-major dense K cache + sparse query (beyond-paper)
 # --------------------------------------------------------------------------
 
+def feature_major_prefill(k_vals, k_idx, d: int):
+    """Prefill-write path for the persistent ``FeatureMajorKV`` image.
+
+    Scatters the prefill's token-major top-k K codes into the dense
+    feature-major layout the decode kernel streams:
+
+        k_vals/k_idx (b, n, hkv, k) int32-indexed codes -> (b, hkv, d, n)
+
+    Runs once per prompt (``to_feature_major`` is the shared scatter —
+    DESIGN.md §2), after which ``KVCache.write`` maintains the image
+    incrementally and the per-step decode performs zero layout transforms.
+    """
+    return to_feature_major(SparseCode(
+        values=jnp.moveaxis(k_vals, 1, 2),                   # (b, hkv, n, k)
+        indices=jnp.moveaxis(k_idx, 1, 2), dim=d))           # -> (b, hkv, d, n)
+
+
+
 def _decode_fm_kernel(qi_ref, len_ref, qv_ref, kf_ref, v_ref, o_ref,
                       s_ref, m_ref, l_ref, acc_ref, *, scale: float,
                       block_n: int, kq: int):
@@ -187,15 +209,22 @@ def _decode_fm_kernel(qi_ref, len_ref, qv_ref, kf_ref, v_ref, o_ref,
                          jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "block_n", "group",
+                                             "interpret"))
 def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
                         scale: float | None = None, block_n: int = 128,
-                        interpret: bool = True):
+                        group: int = 1, interpret: bool = True):
     """Feature-major decode: sparse query gathers k feature rows of the cache.
 
-    q_vals/q_idx: (bh, k); k_feat: (bh, d, n_max); v: (bh, n_max, dv);
-    lengths: (bh,). -> (bh, dv). Only the k addressed rows of k_feat are
-    fetched from HBM (index map driven by scalar-prefetched q_idx).
+    q_vals/q_idx: (bh, k); k_feat: (bh // group, d, n_max);
+    v: (bh // group, n_max, dv); lengths: (bh,). -> (bh, dv) in f32 (the
+    accumulator dtype — bf16-at-rest caches keep oracle precision without
+    an upcast copy outside the kernel). Only the k addressed rows of k_feat
+    are fetched from HBM (index map driven by scalar-prefetched q_idx).
+    ``group`` is the GQA group size (query heads per kv head): query row i
+    reads image/V row i // group through the BlockSpec index maps, so one
+    persistent image serves the whole group — no h-fold repeat is ever
+    materialized.
     """
     bh, kq = q_vals.shape
     d, nmax = k_feat.shape[1], k_feat.shape[2]
@@ -214,10 +243,13 @@ def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, kq), lambda b, n, t, qi, L: (b, 0)),
-                # the magic: fetch exactly feature row qi[b, t]
+                # the magic: fetch exactly feature row qi[b, t] of the
+                # group's shared image
                 pl.BlockSpec((1, 1, block_n),
-                             lambda b, n, t, qi, L: (b, qi[b, t], n)),
-                pl.BlockSpec((1, block_n, dv), lambda b, n, t, qi, L: (b, n, 0)),
+                             lambda b, n, t, qi, L: (b // group,
+                                                     qi[b, t], n)),
+                pl.BlockSpec((1, block_n, dv),
+                             lambda b, n, t, qi, L: (b // group, n, 0)),
             ],
             out_specs=pl.BlockSpec((1, dv), lambda b, n, t, qi, L: (b, 0)),
             scratch_shapes=[
@@ -227,7 +259,7 @@ def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
                 pltpu.VMEM((1, dv), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((bh, dv), v.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,

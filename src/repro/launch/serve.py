@@ -5,9 +5,13 @@
 
 ``--decode-backend`` selects the serving attention kernel through the
 backend registry (repro/models/backends.py): ``pallas`` = token-major
-``flash_sfa_decode``, ``pallas_fm`` = feature-major, ``xla`` = gather
-oracle, ``auto`` = platform default. Capability fallbacks (windowed or
-rope-protected layers, MLA, dense caches) are printed at exit.
+``flash_sfa_decode``, ``pallas_fm`` = feature-major on the persistent
+``FeatureMajorKV`` image (the cache layout follows the backend), ``xla`` =
+gather oracle, ``auto`` = platform default. ``--fm-debug`` turns on the
+pallas_fm persistent-image integrity assertion (costly: it re-derives the
+image every step — a correctness tool, not a serving mode). Capability
+fallbacks (windowed or rope-protected layers, MLA, dense caches) and the
+at-rest cache bytes are printed at exit.
 """
 import argparse
 
@@ -15,8 +19,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.kv_cache import kv_cache_nodes
 from repro.models import init as model_init
-from repro.models.backends import fallback_reports
+from repro.models.backends import fallback_reports, set_fm_debug
 from repro.serve import DecodeEngine, EngineConfig
 
 
@@ -29,9 +34,14 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--decode-backend", default=None,
                     choices=["xla", "pallas", "pallas_fm", "auto"])
+    ap.add_argument("--fm-debug", action="store_true",
+                    help="assert the persistent feature-major K image "
+                         "matches its recomputed form every pallas_fm step")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
+    if args.fm_debug:
+        set_fm_debug(True)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -52,6 +62,10 @@ def main():
         print(f"slot {i}: {eng.outputs[i]}")
     print(f"{steps} batched decode steps, "
           f"{sum(len(o) for o in eng.outputs)} tokens")
+    layouts = sorted({type(n).__name__
+                      for n in kv_cache_nodes(eng.caches)})
+    print(f"kv cache at rest: {eng.cache_bytes() / 2**20:.2f} MiB "
+          f"({', '.join(layouts)})")
     for rep in fallback_reports():
         print(f"backend fallback: {rep.requested} -> {rep.selected} "
               f"({rep.reason}) at {rep.where}")

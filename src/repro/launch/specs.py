@@ -11,12 +11,14 @@ weak-type-correct, shardable, zero allocation.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.kv_cache import KVCache, STACKED_TOKEN_AXIS
+from repro.core.kv_cache import KVCache
 from repro.models import init as model_init, init_decode_caches
 
 DATA_AXES = ("data",)            # FSDP axes (in-pod; pod stays pure-DP)
@@ -145,9 +147,10 @@ def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
          additionally takes the data axis;
       4. MLA latent dim / SSM channel dims shard over model when divisible.
 
-    KVCache nodes carry their token axis structurally
-    (``STACKED_TOKEN_AXIS``), so the length-axis rule dispatches on type;
-    SSM recurrent states have no token axis.
+    KVCache nodes carry their token axis structurally — per field, via
+    ``KVCache.token_axis`` (``FeatureMajorKV.k_feat`` keeps tokens *last*),
+    so the length-axis rule dispatches on type; SSM recurrent states have
+    no token axis.
     """
     a = cfg.attention
     batch_ax = ("pod", "data") if "pod" in mesh.shape else ("data",)
@@ -167,7 +170,7 @@ def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
         len_axes.append(MODEL_AXIS)
     len_ax = tuple(len_axes) if len_axes else None
 
-    def leaf_spec(leaf, token_axis):
+    def leaf_spec(leaf, token_axis, kv=False):
         dims = [None] * leaf.ndim
         if leaf.ndim >= 2 and batch_ok:
             dims[1] = batch_ax
@@ -177,8 +180,11 @@ def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
             if i == token_axis:
                 dims[i] = len_ax
                 used_model = used_model or (len_ax and MODEL_AXIS in len_ax)
-            elif a is not None and a.mla is None and i == 3 and \
-                    sz == a.num_kv_heads and heads_ok:
+            elif kv and a is not None and a.mla is None and i in (2, 3) and \
+                    sz == a.num_kv_heads and heads_ok and not used_model:
+                # KVCache leaves only (SSM states must not trip on size
+                # coincidences): token-major layouts carry hkv at axis 3,
+                # the feature-major K image (L, B, hkv, d, n) at axis 2
                 dims[i] = MODEL_AXIS
                 used_model = True
             elif sz == latent and not used_model:
@@ -196,8 +202,15 @@ def cache_specs(caches_shape, cfg: ModelConfig, mesh: Mesh, *, batch: int,
 
     def one(node):
         if isinstance(node, KVCache):
-            return jax.tree.map(
-                lambda leaf: leaf_spec(leaf, STACKED_TOKEN_AXIS), node)
+            changes = {}
+            for f in dataclasses.fields(node):
+                leaf = getattr(node, f.name)
+                if leaf is None:
+                    continue
+                changes[f.name] = leaf_spec(
+                    leaf, type(node).token_axis(f.name, stacked=True),
+                    kv=True)
+            return dataclasses.replace(node, **changes)
         return leaf_spec(node, -1)
 
     return jax.tree.map(one, caches_shape,

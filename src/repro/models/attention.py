@@ -37,10 +37,13 @@ import jax.numpy as jnp
 from repro.configs.base import AttentionConfig, ModelConfig
 from repro.core.attention import chunked_attention
 from repro.core.kv_cache import (
-    DenseKV, KVCache, MLAKV, MLASparseKV, SparseKV, idx_dtype, pack_indices,
+    DenseKV, FeatureMajorKV, KVCache, MLAKV, MLASparseKV, SparseKV,
+    idx_dtype, pack_indices,
 )
 from repro.core.sparse import topk_st, sparsify, SparseCode
 from repro.distributed.sharding import axis_size, constrain
+from repro.kernels.flash_sfa_decode import LANES as _FM_TILE, \
+    feature_major_prefill
 from repro.models.backends import (
     AttentionRequest, DecodeQuery, expand_kv as _expand_kv, select_backend,
 )
@@ -136,6 +139,32 @@ def _request(a: AttentionConfig, *, mode: str, window) -> AttentionRequest:
 # cache
 # --------------------------------------------------------------------------
 
+def _decode_uses_persistent_cache(cfg: ModelConfig) -> bool:
+    """Cache layout follows the *selected decode backend*, not vice versa:
+    a backend with the ``persistent_cache`` capability (pallas_fm) keeps its
+    feature-major K image resident in the cache. Capability mismatches
+    (window, rope-protect, MLA, dense) resolve to the oracle here exactly
+    as they would at decode time, so allocation and serving always agree."""
+    a = cfg.attention
+    sel = select_backend(a.decode_backend,
+                         _request(a, mode="decode", window=None),
+                         where=f"{cfg.name}/cache")
+    return sel.backend.caps.persistent_cache
+
+
+def decode_cache_token_multiple(cfg: ModelConfig) -> int:
+    """Allocation granularity of the decode cache's token axis.
+
+    The persistent feature-major image is streamed by the kernel in
+    128-lane token tiles; a token axis that is not a whole number of tiles
+    makes the kernel's pad fallback copy the entire cache every step —
+    exactly the re-materialization the layout retires. The engine rounds
+    its ``max_len`` up by this multiple (1 for every other layout)."""
+    if cfg.attention is None or cfg.attention.sfa_k is None:
+        return 1
+    return _FM_TILE if _decode_uses_persistent_cache(cfg) else 1
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16) -> KVCache:
     """Per-layer typed decode cache (caller stacks across layers)."""
@@ -145,10 +174,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         ckv = jnp.zeros((batch, max_len, m.kv_lora_rank), dtype)
         kpe = jnp.zeros((batch, max_len, m.rope_head_dim), dtype)
         if a.sfa_k is not None:
-            return MLASparseKV(ckv=ckv, kpe=kpe, ckv_sp=jnp.zeros_like(ckv))
+            kk = min(a.sfa_k, m.kv_lora_rank)
+            return MLASparseKV(
+                ckv=ckv, kpe=kpe,
+                ckv_sp_vals=jnp.zeros((batch, max_len, kk), dtype),
+                ckv_sp_idx=jnp.zeros((batch, max_len, kk),
+                                     idx_dtype(m.kv_lora_rank)))
         return MLAKV(ckv=ckv, kpe=kpe)
     hkv, hd = a.num_kv_heads, a.head_dim
     if a.sfa_k is not None:
+        if _decode_uses_persistent_cache(cfg):
+            return FeatureMajorKV(
+                k_feat=jnp.zeros((batch, hkv, hd, max_len), dtype),
+                v=jnp.zeros((batch, hkv, max_len, hd), dtype))
         p = a.sfa_rope_protect
         kk = min(a.sfa_k, hd - p)
         return SparseKV(
@@ -245,10 +283,19 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
         if a.sfa_k is not None:
             p = a.sfa_rope_protect
             kc = _sfa_code(k, a)
-            new_cache = SparseKV(k_vals=kc.values.astype(dt),
-                                 k_idx=pack_indices(kc.indices, hd - p),
-                                 v=v,
-                                 k_protect=k[..., :p] if p else None)
+            if _decode_uses_persistent_cache(cfg):
+                # feature-major prefill-write: build the persistent (d, n)
+                # image (and the kernel-native heads-major V) once; decode
+                # steps extend both column-by-column
+                new_cache = FeatureMajorKV(
+                    k_feat=feature_major_prefill(kc.values.astype(dt),
+                                                 kc.indices, hd),
+                    v=jnp.moveaxis(v, 1, 2))
+            else:
+                new_cache = SparseKV(k_vals=kc.values.astype(dt),
+                                     k_idx=pack_indices(kc.indices, hd - p),
+                                     v=v,
+                                     k_protect=k[..., :p] if p else None)
         else:
             new_cache = DenseKV(k=k, v=v)
     return AttentionOut(out, new_cache, distill)
@@ -298,9 +345,11 @@ def _mla_apply(params, x, *, cfg: ModelConfig, positions, mode, cache,
 
     if mode == "decode":
         assert cache is not None and cache_len is not None
+        code = sparsify(ckv, a.sfa_k) if a.sfa_k is not None else None
         cache = cache.write(
             cache_len, ckv=ckv, kpe=kpe[:, :, 0],
-            ckv_sp=(topk_st(ckv, a.sfa_k) if a.sfa_k is not None else None))
+            ckv_sp_vals=None if code is None else code.values,
+            ckv_sp_idx=None if code is None else code.indices)
         sel = select_backend(a.decode_backend,
                              _request(a, mode="decode", window=None),
                              where=f"{cfg.name}/mla")
@@ -336,8 +385,11 @@ def _mla_apply(params, x, *, cfg: ModelConfig, positions, mode, cache,
     new_cache = None
     if mode == "prefill":
         if a.sfa_k is not None:
-            new_cache = MLASparseKV(ckv=ckv, kpe=kpe[:, :, 0],
-                                    ckv_sp=topk_st(ckv, a.sfa_k).astype(dt))
+            code = sparsify(ckv, a.sfa_k)
+            new_cache = MLASparseKV(
+                ckv=ckv, kpe=kpe[:, :, 0],
+                ckv_sp_vals=code.values.astype(dt),
+                ckv_sp_idx=pack_indices(code.indices, m.kv_lora_rank))
         else:
             new_cache = MLAKV(ckv=ckv, kpe=kpe[:, :, 0])
     return AttentionOut(out, new_cache)

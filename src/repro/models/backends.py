@@ -22,7 +22,11 @@ Registered backends:
                     ``flash_sfa_decode`` (O(nk) K-bytes per step).
   * ``pallas_fm`` — decode-only: the beyond-paper feature-major decode
                     kernel ``flash_sfa_decode_fm`` (sparse query selects k
-                    feature rows of a dense feature-major K image).
+                    feature rows of the *persistent* dense feature-major K
+                    image kept in ``FeatureMajorKV`` — its
+                    ``persistent_cache`` capability is what makes the cache
+                    allocator pick that layout; the hot path performs zero
+                    per-step re-materialization).
   * ``auto``      — not a backend but a selection policy: the first
                     registered backend whose capabilities cover the request,
                     preferring the Pallas kernels on TPU and the XLA paths
@@ -44,12 +48,13 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.attention import chunked_attention, NEG_INF
 from repro.core.kv_cache import (
-    KVCache, MLAKV, MLASparseKV, SparseKV, unpack_indices,
+    FeatureMajorKV, KVCache, MLAKV, MLASparseKV, SparseKV, unpack_indices,
 )
-from repro.core.sparse import SparseCode, sparsify, to_feature_major, topk_st
+from repro.core.sparse import sparsify, to_feature_major, topk_st
 from repro.kernels.flash_sfa_decode import flash_sfa_decode, flash_sfa_decode_fm
 from repro.kernels.ops import dense_attention_op, sfa_attention_op
 
@@ -84,6 +89,10 @@ class Capabilities:
     sparse: bool = True
     dense: bool = True
     differentiable: bool = False
+    # the backend keeps its decode layout resident in the cache itself
+    # (FeatureMajorKV): the cache allocator picks the cache type from the
+    # selected backend — not the other way around
+    persistent_cache: bool = False
 
 
 class DecodeQuery(NamedTuple):
@@ -157,6 +166,16 @@ def _fold_expand(t, h):
     return t.reshape((b * h, n) + t.shape[3:])
 
 
+def _expand_feature_major(t, h):
+    """(b, hkv, ...) heads-major FeatureMajorKV leaf -> (b, h, ...) GQA
+    head repeat (oracle-side only; the kernel shares per-group rows via its
+    index maps instead)."""
+    hkv = t.shape[1]
+    if hkv == h:
+        return t
+    return jnp.repeat(t, h // hkv, axis=1)
+
+
 def _st_protect(x, sfa_k, p):
     """Straight-through top-k keeping p leading dims dense (paper A.1)."""
     if sfa_k is None:
@@ -222,6 +241,10 @@ class XLABackend(AttentionBackend):
             return self._decode_mla(query, cache, lengths, scale=scale,
                                     sfa_k=sfa_k)
         h = query.q.shape[2]
+        if isinstance(cache, FeatureMajorKV):
+            return self._decode_feature_major(query, cache, lengths,
+                                              scale=scale, window=window,
+                                              sfa_k=sfa_k)
         nmax = cache.v.shape[1]
         if isinstance(cache, SparseKV):
             p = rope_protect
@@ -246,13 +269,43 @@ class XLABackend(AttentionBackend):
         vr = expand_kv(cache.v, h)
         return jnp.einsum("bnh,bnhd->bhd", pr, vr.astype(jnp.float32))
 
+    def _decode_feature_major(self, query, cache, lengths, *, scale, window,
+                              sfa_k):
+        """Persistent-image oracle: sparse q against the dense (d, n)
+        feature-major K image and the kernel-native heads-major V — same
+        math the pallas_fm kernel streams."""
+        h = query.q.shape[2]
+        nmax = cache.k_feat.shape[-1]
+        qs = topk_st(query.q, sfa_k)[:, 0]                   # (b, h, d)
+        kf = _expand_feature_major(cache.k_feat, h)          # (b, h, d, n)
+        s = jnp.einsum("bhd,bhdn->bnh", qs.astype(jnp.float32),
+                       kf.astype(jnp.float32)) * scale
+        ok = _prefix_mask(nmax, lengths, window)
+        s = jnp.where(ok[..., None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=1)                       # over n
+        vr = _expand_feature_major(cache.v, h)               # (b, h, n, dv)
+        return jnp.einsum("bnh,bhnd->bhd", pr, vr.astype(jnp.float32))
+
     def _decode_mla(self, query, cache, lengths, *, scale, sfa_k):
         nmax = cache.ckv.shape[1]
-        sparse = sfa_k is not None
-        ctx = cache.ckv_sp if sparse else cache.ckv
-        qlat = topk_st(query.q, sfa_k) if sparse else query.q  # (b, 1, h, r)
-        s = jnp.einsum("bqhr,bnr->bnh", qlat.astype(jnp.float32),
-                       ctx.astype(jnp.float32)) * scale
+        if isinstance(cache, MLASparseKV):
+            # packed sparse-latent scoring: codes are head-independent (one
+            # per token), so the gather runs on the token axis only —
+            # O(n·k) touched latent bytes, no per-head gather pathology
+            qlat = topk_st(query.q, sfa_k)[:, 0]             # (b, h, r)
+            idx = unpack_indices(cache.ckv_sp_idx)           # (b, n, k)
+            qb = jnp.broadcast_to(
+                qlat[:, None].astype(jnp.float32),
+                (qlat.shape[0], nmax) + qlat.shape[1:])      # (b, n, h, r)
+            qg = jnp.take_along_axis(
+                qb, jnp.broadcast_to(idx[:, :, None],
+                                     idx.shape[:2] + (qlat.shape[1],)
+                                     + idx.shape[2:]), axis=-1)  # (b, n, h, k)
+            s = (qg * cache.ckv_sp_vals[:, :, None].astype(jnp.float32)
+                 ).sum(-1) * scale
+        else:
+            s = jnp.einsum("bqhr,bnr->bnh", query.q.astype(jnp.float32),
+                           cache.ckv.astype(jnp.float32)) * scale
         s = s + jnp.einsum("bqhp,bnp->bnh",
                            query.q_pe.astype(jnp.float32),
                            cache.kpe.astype(jnp.float32)) * scale
@@ -313,36 +366,95 @@ class PallasBackend(AttentionBackend):
         return o.reshape(b, h, -1)
 
 
+# Debug switch for the pallas_fm persistent-image integrity check (set via
+# ``set_fm_debug`` / ``--fm-debug`` on the serve launcher). Off by default:
+# the check re-derives the feature-major image from its own columns, which
+# costs exactly the re-materialization the persistent cache retired.
+_FM_DEBUG = False
+
+
+def set_fm_debug(enabled: bool) -> None:
+    """Toggle the ``pallas_fm`` persistent-image integrity assertion.
+
+    The flag is read at *trace* time, so the engine's cached decode
+    executables are dropped here — engines built after this call pick the
+    new setting up; engines already constructed keep the behavior they
+    were traced with (they hold their compiled functions directly)."""
+    global _FM_DEBUG
+    _FM_DEBUG = bool(enabled)
+    from repro.serve.engine import _jitted_fns
+    _jitted_fns.cache_clear()
+
+
+def _assert_fm_image_equal(persistent, recomputed):
+    if not np.array_equal(np.asarray(persistent, np.float32),
+                          np.asarray(recomputed, np.float32)):
+        bad = int((np.asarray(persistent, np.float32) !=
+                   np.asarray(recomputed, np.float32)).sum())
+        raise AssertionError(
+            f"FeatureMajorKV image diverged from its recomputed form on "
+            f"{bad} entries — a stale column survived an incremental "
+            f"write/insert_slot (image columns must stay <= k-sparse)")
+
+
+def _debug_check_fm_image(kfeat, sfa_k):
+    """Assert the persistent (bh, d, n) image equals the image recomputed
+    from its own columns (sparsify -> to_feature_major). Incremental
+    maintenance can only corrupt the image by leaving *stale* entries
+    behind, which makes a column more than k-sparse — the recomputed image
+    then drops them and the equality fails. ``to_feature_major`` lives on
+    as this oracle; the hot decode path never calls it."""
+    tm = jnp.swapaxes(kfeat, -1, -2)                         # (bh, n, d)
+    recomputed = to_feature_major(sparsify(tm, min(sfa_k, tm.shape[-1])))
+    if isinstance(kfeat, jax.core.Tracer):
+        jax.debug.callback(_assert_fm_image_equal, kfeat, recomputed)
+    else:
+        _assert_fm_image_equal(kfeat, recomputed)
+
+
 class PallasFMBackend(AttentionBackend):
     """Feature-major decode: the sparse *query* selects which k of the d
     feature rows to stream (DESIGN.md §2, beyond-paper layout).
 
-    The serving cache is token-major (``SparseKV``); the feature-major K
-    image is materialized from the stored codes each step, so this backend
-    currently demonstrates the kernel's access pattern and exact-parity
-    math rather than its HBM savings — a persistent feature-major cache
-    type is the follow-up that makes the O(nk) reads real.
+    The serving cache is the persistent ``FeatureMajorKV``: the dense
+    (d, n) K image is maintained incrementally by the cache's own
+    ``write``/``insert_slot`` and read here as-is — zero per-step
+    re-materialization, so the kernel's O(nk) feature-row reads are the
+    step's actual HBM traffic (``persistent_cache`` capability drives the
+    allocator to this layout).
     """
     name = "pallas_fm"
     caps = Capabilities(full=False, decode=True, causal=True,
                         bidirectional=True, window=False, rope_protect=False,
                         mla=False, sparse=True, dense=False,
-                        differentiable=False)
+                        differentiable=False, persistent_cache=True)
 
-    def decode(self, query: DecodeQuery, cache: SparseKV, lengths, *,
+    def decode(self, query: DecodeQuery, cache: FeatureMajorKV, lengths, *,
                scale, window, sfa_k, rope_protect):
+        if not isinstance(cache, FeatureMajorKV):
+            raise TypeError(
+                f"pallas_fm serves the persistent FeatureMajorKV cache, got "
+                f"{type(cache).__name__} — allocate caches through "
+                f"init_cache/init_decode_caches so the layout follows the "
+                f"selected backend")
         b, _, h, d = query.q.shape
+        hkv, nmax = cache.k_feat.shape[1], cache.k_feat.shape[-1]
         code = sparsify(query.q[:, 0], min(sfa_k, d))        # (b, h, k)
         kq = code.values.shape[-1]
         qv = code.values.reshape(b * h, kq)
         qi = code.indices.reshape(b * h, kq)
-        kv = _fold_expand(cache.k_vals, h)                   # (b*h, n, k)
-        ki = _fold_expand(unpack_indices(cache.k_idx), h)
-        kfeat = to_feature_major(SparseCode(values=kv, indices=ki, dim=d))
-        vf = _fold_expand(cache.v, h).astype(jnp.float32)    # see PallasBackend
+        # zero per-step copies: both cache leaves are stored kernel-native
+        # (heads-major), so the flat (b*hkv, ...) views are reshapes, and
+        # GQA is served by the kernel's i // group index maps rather than a
+        # materialized head repeat. The kernel accumulates and emits f32,
+        # so bf16-at-rest V still matches the oracle's precision.
+        kfeat = cache.k_feat.reshape(b * hkv, d, nmax)
+        if _FM_DEBUG:
+            _debug_check_fm_image(kfeat, sfa_k)
+        vf = cache.v.reshape(b * hkv, nmax, -1)
         lens = jnp.repeat(lengths + 1, h)
         o = flash_sfa_decode_fm(qv, qi, kfeat, vf, lens, scale=scale,
-                                interpret=not _ON_TPU)
+                                group=h // hkv, interpret=not _ON_TPU)
         return o.reshape(b, h, -1)
 
 

@@ -8,13 +8,16 @@ EOS/max_tokens. The decode step is a single jitted function over the full
 slot batch — the shape the decode_32k/long_500k dry-run cells lower.
 
 Caches are typed ``KVCache`` pytrees (repro/core/kv_cache.py): slot
-insertion dispatches on the cache type's structural token axis instead of
+insertion dispatches on each field's structural token axis instead of
 shape-sniffing, and ``EngineConfig.decode_backend`` selects the serving
-attention kernel through the backend registry (``"pallas"`` =
-token-major ``flash_sfa_decode``, ``"pallas_fm"`` = feature-major,
-``"xla"`` = the gather oracle). Slot lengths live host-side (NumPy): the
-decode step reads them as device inputs, but per-slot bookkeeping never
-forces a device→host sync.
+attention kernel through the backend registry (``"pallas"`` = token-major
+``flash_sfa_decode``, ``"pallas_fm"`` = feature-major ``flash_sfa_decode_fm``
+on the *persistent* ``FeatureMajorKV`` image — the cache layout follows the
+selected backend, so prefill handoff, per-step writes, and slot
+eviction/reuse all maintain the image incrementally with zero per-step
+re-materialization; ``"xla"`` = the gather oracle). Slot lengths live
+host-side (NumPy): the decode step reads them as device inputs, but
+per-slot bookkeeping never forces a device→host sync.
 """
 from __future__ import annotations
 
@@ -27,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.kv_cache import KVCache
+from repro.core.kv_cache import KVCache, cache_nbytes
 from repro.models import decode_step, init_decode_caches, prefill
+from repro.models.attention import decode_cache_token_multiple
 
 
 @functools.lru_cache(maxsize=16)
@@ -63,7 +67,13 @@ class DecodeEngine:
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
-        self.caches = init_decode_caches(cfg, ecfg.max_slots, ecfg.max_len)
+        # token axis allocated in whole kernel tiles (pallas_fm streams the
+        # persistent image 128 tokens at a time; a ragged tail would make
+        # the kernel pad-copy the whole cache every step). max_len keeps
+        # its request-cap meaning; only the allocation rounds up.
+        mult = decode_cache_token_multiple(cfg)
+        self._cache_len = -(-ecfg.max_len // mult) * mult
+        self.caches = init_decode_caches(cfg, ecfg.max_slots, self._cache_len)
         # host-side slot lengths: per-slot bookkeeping (EOS/max_len checks)
         # must not force a device→host transfer every step
         self.lengths = np.zeros((ecfg.max_slots,), np.int32)
@@ -75,12 +85,19 @@ class DecodeEngine:
         self._prefill, self._decode = _jitted_fns(cfg)
 
     # ------------------------------------------------------------------
+    def cache_bytes(self) -> int:
+        """At-rest bytes of the engine's KV caches (KVCache leaves only) —
+        the serving-side number the bench kvreal_* rows model per token."""
+        return cache_nbytes(self.caches)
+
+    # ------------------------------------------------------------------
     def _insert_cache(self, slot: int, one_caches):
         """Insert a batch-1 prefill cache into the slot of the batched
         cache. KVCache nodes know their token axis (insert_slot pads it to
-        max_len from the source's own length); SSM recurrent states have no
-        length axis and land with a plain slot update."""
-        max_len = self.ecfg.max_len
+        the allocated cache length from the source's own length); SSM
+        recurrent states have no length axis and land with a plain slot
+        update."""
+        max_len = self._cache_len
 
         def ins(dst, src):
             if isinstance(dst, KVCache):

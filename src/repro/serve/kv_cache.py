@@ -7,10 +7,13 @@ assigned arch — or uint16 for d ≤ 65535 per the paper §3.2), which is what
 realizes Appendix J's ratio ``2d/(3k+4)`` for the K half of the cache.
 
 This module is the byte accounting on top: ``cache_bytes_per_token``
-reproduces the paper's Figure 5 memory curves analytically, and
-``realized_cache_bytes_per_token`` measures the *actual* typed cache a
-config allocates (via ``jax.eval_shape`` — zero allocation); tests assert
-the two agree for the packed GQA layouts.
+reproduces the paper's Figure 5 memory curves analytically (three layouts
+for GQA: ``dense``, packed ``sfa``, and the beyond-paper ``fm``
+feature-major image — dense-K bytes at rest, bought back as O(nk) decode
+reads), and ``realized_cache_bytes_per_token`` measures the *actual* typed
+cache a config allocates (via ``jax.eval_shape`` — zero allocation); tests
+assert the two agree exactly for every layout, the packed ``MLASparseKV``
+latent included.
 """
 from __future__ import annotations
 
@@ -42,7 +45,13 @@ def dense_k_bytes(n: int, d: int, val_bytes: int = 2) -> int:
 
 
 def cache_bytes_per_token(cfg: ModelConfig) -> dict:
-    """Per-token KV bytes, dense vs SFA layouts, all layers (Fig. 5 model)."""
+    """Per-token KV bytes by layout, all layers (Fig. 5 model).
+
+    GQA configs get a third key, ``fm``: the persistent ``FeatureMajorKV``
+    image stores K dense (feature-major), so it costs dense-KV bytes at
+    rest — the layout spends capacity to make the decode step's O(nk)
+    feature-row reads real (DESIGN.md §2/§4).
+    """
     a = cfg.attention
     if a is None:
         return {"dense": 0, "sfa": 0}
@@ -50,7 +59,8 @@ def cache_bytes_per_token(cfg: ModelConfig) -> dict:
         m = a.mla
         base = (m.kv_lora_rank + m.rope_head_dim) * 2
         sfa = base if a.sfa_k is None else (
-            base + a.sfa_k * (2 + idx_bytes(m.kv_lora_rank)))
+            base + min(a.sfa_k, m.kv_lora_rank)
+            * (2 + idx_bytes(m.kv_lora_rank)))
         return {"dense": base * cfg.num_layers, "sfa": sfa * cfg.num_layers}
     hkv, hd = a.num_kv_heads, a.head_dim
     dense = 2 * hkv * hd * 2                     # K + V bf16
@@ -58,9 +68,10 @@ def cache_bytes_per_token(cfg: ModelConfig) -> dict:
         sfa = dense
     else:
         p = a.sfa_rope_protect
-        k_part = hkv * (a.sfa_k * (2 + idx_bytes(hd)) + p * 2)
+        k_part = hkv * (min(a.sfa_k, hd - p) * (2 + idx_bytes(hd - p)) + p * 2)
         sfa = k_part + hkv * hd * 2              # sparse K + dense V
-    return {"dense": dense * cfg.num_layers, "sfa": sfa * cfg.num_layers}
+    return {"dense": dense * cfg.num_layers, "sfa": sfa * cfg.num_layers,
+            "fm": dense * cfg.num_layers}        # dense-layout K image + V
 
 
 def realized_cache_bytes_per_token(cfg: ModelConfig, *, max_len: int = 128,
@@ -70,10 +81,10 @@ def realized_cache_bytes_per_token(cfg: ModelConfig, *, max_len: int = 128,
     ``jax.eval_shape``, so no memory is touched.
 
     For GQA ``SparseKV`` this equals ``cache_bytes_per_token(cfg)["sfa"]``
-    exactly (uint8-packed indices). The MLA+SFA XLA-proxy cache stores the
-    sparsified latent in dense layout for SPMD (see MLASparseKV), so its
-    realized bytes exceed the analytic packed model until a packed MLA
-    layout ships.
+    exactly (uint8-packed indices); a config whose decode backend selects
+    the persistent feature-major layout realizes the ``"fm"`` model, and the
+    packed ``MLASparseKV`` latent realizes the ``"sfa"`` MLA model exactly
+    (the old dense-layout proxy and its reported byte gap are gone).
     """
     import jax
 

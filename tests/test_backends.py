@@ -1,9 +1,12 @@
 """Attention-backend registry tests (repro/models/backends.py): capability
-flags, explicit vs auto selection, and structured fallback reporting — the
+flags, explicit vs auto selection, structured fallback reporting — the
 replacement for the old silent ``use_pallas`` predicate + trace-time
-warnings."""
+warnings — and the pallas_fm persistent-cache contract (zero per-step
+re-materialization, debug-flagged image integrity)."""
 import dataclasses
+import inspect
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -37,6 +40,10 @@ def test_capability_flags():
     assert pal.caps.full and pal.caps.decode and pal.caps.differentiable
     assert not (pal.caps.window or pal.caps.rope_protect or pal.caps.mla)
     assert fm.caps.decode and not fm.caps.full
+    # the cache allocator keys off persistent_cache: only pallas_fm keeps
+    # its decode layout resident in the cache (FeatureMajorKV)
+    assert fm.caps.persistent_cache
+    assert not (xla.caps.persistent_cache or pal.caps.persistent_cache)
 
 
 def test_explicit_selection_and_auto_on_cpu():
@@ -91,3 +98,106 @@ def test_rope_protected_model_reports_fallback(rng):
     assert np.isfinite(np.asarray(out.logits)).all()
     assert any(r.requested == "pallas" and "rope_protect" in r.reason
                for r in B.fallback_reports())
+
+
+# --------------------------------------------------------------------------
+# pallas_fm persistent-cache contract
+# --------------------------------------------------------------------------
+
+def test_pallas_fm_decode_never_rematerializes():
+    """Grep-able regression: the pallas_fm decode step reads the persistent
+    FeatureMajorKV image as-is — neither the per-step to_feature_major
+    rebuild nor a GQA head-repeat of the image (the kernel's group index
+    maps share one image per kv head) may come back. (to_feature_major
+    itself stays exported as a test/oracle helper; the debug-only integrity
+    check lives in a separate function.)"""
+    src = inspect.getsource(B.PallasFMBackend.decode)
+    assert "to_feature_major" not in src
+    assert "_expand_feature_major" not in src and "expand_kv" not in src
+    assert "_fold_expand" not in src
+    # the helper remains available for oracles
+    from repro.core import to_feature_major  # noqa: F401
+
+
+def test_pallas_fm_gqa_group_matches_oracle():
+    """GQA (h > hkv): the kernel's group index maps must score every query
+    head against its kv group's shared image — parity with the XLA oracle
+    reading the same FeatureMajorKV cache."""
+    from repro.core.kv_cache import FeatureMajorKV
+    from repro.core.sparse import sparsify
+    from repro.kernels.flash_sfa_decode import feature_major_prefill
+
+    b, hkv, h, d, n, k = 1, 2, 4, 16, 8, 4
+    rng = jax.random.PRNGKey(11)
+    code = sparsify(jax.random.normal(rng, (b, n, hkv, d), jnp.float32), k)
+    cache = FeatureMajorKV(
+        k_feat=feature_major_prefill(code.values, code.indices, d),
+        v=jax.random.normal(jax.random.fold_in(rng, 1), (b, hkv, n, d),
+                            jnp.float32))            # kernel-native layout
+    q = jax.random.normal(jax.random.fold_in(rng, 2), (b, 1, h, d),
+                          jnp.float32)
+    lengths = jnp.full((b,), n - 1, jnp.int32)
+    kw = dict(scale=d ** -0.5, window=None, sfa_k=k, rope_protect=0)
+    out_fm = B.get_backend("pallas_fm").decode(B.DecodeQuery(q=q), cache,
+                                               lengths, **kw)
+    out_xla = B.get_backend("xla").decode(B.DecodeQuery(q=q), cache,
+                                          lengths, **kw)
+    np.testing.assert_allclose(np.asarray(out_fm), np.asarray(out_xla),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _fm_fixture(corrupt: bool):
+    from repro.core.kv_cache import FeatureMajorKV
+    from repro.core.sparse import sparsify
+    from repro.kernels.flash_sfa_decode import feature_major_prefill
+
+    b, h, d, n, k = 1, 2, 16, 8, 4
+    rng = jax.random.PRNGKey(7)
+    code = sparsify(jax.random.normal(rng, (b, n, h, d), jnp.float32), k)
+    img = feature_major_prefill(code.values, code.indices, d)   # (b, h, d, n)
+    if corrupt:
+        # a stale column: denser than the k-sparse write contract allows
+        img = img.at[0, 0, :, 0].set(1.0)
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (b, h, n, d),
+                          jnp.float32)               # kernel-native layout
+    cache = FeatureMajorKV(k_feat=img, v=v)
+    q = jax.random.normal(jax.random.fold_in(rng, 2), (b, 1, h, d),
+                          jnp.float32)
+    lengths = jnp.full((b,), n - 1, jnp.int32)
+    return cache, q, lengths, d, k
+
+
+def test_fm_debug_flag_checks_persistent_image():
+    """--fm-debug contract: a clean persistent image passes the integrity
+    assertion; an image with a stale (denser-than-k) column fails it."""
+    fm = B.get_backend("pallas_fm")
+    try:
+        B.set_fm_debug(True)
+        # the flag is trace-time: toggling must drop the engine's cached
+        # decode executables so later engines re-trace with it active
+        from repro.serve.engine import _jitted_fns
+        assert _jitted_fns.cache_info().currsize == 0
+        cache, q, lengths, d, k = _fm_fixture(corrupt=False)
+        out = fm.decode(B.DecodeQuery(q=q), cache, lengths,
+                        scale=d ** -0.5, window=None, sfa_k=k, rope_protect=0)
+        assert np.isfinite(np.asarray(out)).all()
+        cache, q, lengths, d, k = _fm_fixture(corrupt=True)
+        with pytest.raises(AssertionError, match="stale"):
+            fm.decode(B.DecodeQuery(q=q), cache, lengths,
+                      scale=d ** -0.5, window=None, sfa_k=k, rope_protect=0)
+    finally:
+        B.set_fm_debug(False)
+
+
+def test_pallas_fm_rejects_token_major_cache():
+    """Layout follows the backend: handing pallas_fm a token-major cache is
+    a programming error, not a silent rematerialization."""
+    from repro.core.kv_cache import SparseKV
+    fm = B.get_backend("pallas_fm")
+    cache = SparseKV(k_vals=jnp.zeros((1, 4, 1, 2)),
+                     k_idx=jnp.zeros((1, 4, 1, 2), jnp.uint8),
+                     v=jnp.zeros((1, 4, 1, 8)))
+    with pytest.raises(TypeError, match="FeatureMajorKV"):
+        fm.decode(B.DecodeQuery(q=jnp.zeros((1, 1, 1, 8))), cache,
+                  jnp.zeros((1,), jnp.int32), scale=1.0, window=None,
+                  sfa_k=2, rope_protect=0)

@@ -116,6 +116,27 @@ def test_flash_sfa_decode_layouts_agree(rng):
     np.testing.assert_allclose(np.asarray(o3), np.asarray(o5), atol=2e-5)
 
 
+def test_flash_sfa_decode_fm_gqa_group(rng):
+    """group > 1 (GQA): query row i reads shared image/V row i // group via
+    the index maps — identical to running group=1 on an explicitly repeated
+    image (the expansion the kernel exists to avoid materializing)."""
+    bkv, g, nmax, d, k, dv = 2, 3, 256, 64, 8, 64
+    bh = bkv * g
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (bh, d))
+    kraw = jax.random.normal(jax.random.fold_in(rng, 2), (bkv, nmax, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (bkv, nmax, dv))
+    kv_, ki = REF.rtopk_ref(kraw, k)
+    qv, qi = REF.rtopk_ref(q, k)
+    kfeat = jnp.swapaxes(densify(SparseCode(kv_, ki, d)), -1, -2)
+    lengths = jnp.repeat(jnp.array([256, 130], jnp.int32), g)
+    o_grp = flash_sfa_decode_fm(qv, qi, kfeat, v, lengths, group=g)
+    o_rep = flash_sfa_decode_fm(qv, qi,
+                                jnp.repeat(kfeat, g, axis=0),
+                                jnp.repeat(v, g, axis=0), lengths)
+    np.testing.assert_allclose(np.asarray(o_grp), np.asarray(o_rep),
+                               atol=2e-5)
+
+
 @pytest.mark.parametrize("n", [100, 128, 257])
 def test_flash_sfa_decode_padding(rng, n):
     bh, d, k, dv = 2, 64, 8, 64

@@ -1,17 +1,29 @@
 """Typed KVCache tests (repro/core/kv_cache.py): packed at-rest indices,
 realized-vs-analytic bytes per token, write/insert semantics, and pytree
-registration (the engine and launch specs rely on these invariants)."""
+registration (the engine and launch specs rely on these invariants) — for
+the token-major layouts AND the persistent ``FeatureMajorKV`` /
+packed ``MLASparseKV`` serving layouts."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.kv_cache import (
-    DenseKV, MLASparseKV, SparseKV, idx_dtype, pack_indices, unpack_indices,
+    DenseKV, FeatureMajorKV, MLASparseKV, SparseKV, idx_dtype, pack_indices,
+    unpack_indices,
 )
+from repro.core.sparse import SparseCode, sparsify, to_feature_major
 from repro.models.attention import init_cache
 from repro.serve.kv_cache import (cache_bytes_per_token,
                                   realized_cache_bytes_per_token)
+
+
+def _fm_cfg(name="gpt2-small-sfa8"):
+    cfg = get_config(name)
+    return dataclasses.replace(cfg, attention=dataclasses.replace(
+        cfg.attention, decode_backend="pallas_fm"))
 
 
 def test_pack_unpack_roundtrip():
@@ -32,9 +44,16 @@ def test_init_cache_types_and_packed_idx():
     assert c.k_protect is None
     assert isinstance(init_cache(get_config("gpt2-small").reduced(), 2, 16),
                       DenseKV)
-    assert isinstance(
-        init_cache(get_config("deepseek-v2-236b").reduced(), 2, 16),
-        MLASparseKV)
+    mla = init_cache(get_config("deepseek-v2-236b").reduced(), 2, 16)
+    assert isinstance(mla, MLASparseKV)
+    assert mla.ckv_sp_idx.dtype == jnp.uint8     # reduced kv_lora_rank = 16
+    # cache layout follows the decode backend: pallas_fm (persistent_cache)
+    # allocates the feature-major image instead of token-major codes
+    fm = init_cache(_fm_cfg().reduced(), 2, 16)
+    assert isinstance(fm, FeatureMajorKV)
+    a = _fm_cfg().reduced().attention
+    assert fm.k_feat.shape == (2, a.num_kv_heads, a.head_dim, 16)
+    assert fm.v.shape == (2, a.num_kv_heads, 16, a.head_dim)  # kernel-native
 
 
 def test_write_packs_indices_and_roundtrips():
@@ -57,6 +76,38 @@ def test_write_packs_indices_and_roundtrips():
     assert (c.k_vals == 0).all()
 
 
+def test_feature_major_write_maintains_persistent_image():
+    """FeatureMajorKV.write scatters one dense feature column per token at
+    the structural token axis (LAST for k_feat) — the image equals the
+    to_feature_major oracle over the written codes, rows stay untouched."""
+    cfg = _fm_cfg().reduced()
+    a = cfg.attention
+    c = init_cache(cfg, 2, 8, dtype=jnp.float32)
+    assert isinstance(c, FeatureMajorKV)
+    hkv, hd = a.num_kv_heads, a.head_dim
+    kk = min(a.sfa_k, hd)
+    rng = jax.random.PRNGKey(0)
+    code = sparsify(jax.random.normal(rng, (2, 1, hkv, hd)), kk)
+    v = jnp.ones((2, 1, hkv, hd), jnp.float32)
+    pos = jnp.array([0, 3], jnp.int32)           # ragged positions
+    c2 = c.write(pos, k_vals=code.values, k_idx=code.indices, v=v,
+                 k_protect=None)                 # SparseKV-uniform call site
+    oracle = to_feature_major(SparseCode(                  # (b, hkv, d, 1)
+        values=jnp.moveaxis(code.values, 1, 2),
+        indices=jnp.moveaxis(code.indices, 1, 2), dim=hd))
+    np.testing.assert_array_equal(np.asarray(c2.k_feat[0, :, :, 0:1]),
+                                  np.asarray(oracle[0]))
+    np.testing.assert_array_equal(np.asarray(c2.k_feat[1, :, :, 3:4]),
+                                  np.asarray(oracle[1]))
+    assert (np.asarray(c2.k_feat[0, :, :, 1:]) == 0).all()   # rows untouched
+    assert (np.asarray(c2.k_feat[1, :, :, :3]) == 0).all()
+    # V lands re-ordered into the kernel-native (b, hkv, n, dv) layout
+    assert (np.asarray(c2.v[0, :, 0]) == 1).all()
+    assert (np.asarray(c2.v[1, :, 3]) == 1).all()
+    assert (np.asarray(c2.v[1, :, :3]) == 0).all()
+    assert (np.asarray(c.k_feat) == 0).all()     # functional update
+
+
 def test_insert_slot_structural_token_axis():
     cfg = get_config("gpt2-small-sfa8").reduced()
     dst = jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -76,9 +127,33 @@ def test_insert_slot_structural_token_axis():
     assert (np.asarray(out.k_vals[:, 0]) == 0.0).all()      # other slots
 
 
+def test_insert_slot_feature_major_token_axis_last():
+    """insert_slot pads/writes k_feat on its structural LAST token axis and
+    overwrites the whole slot — stale image columns cannot survive reuse."""
+    cfg = _fm_cfg().reduced()
+    dst_one = init_cache(cfg, 4, 16, jnp.float32)
+    dst = jax.tree.map(lambda *xs: jnp.stack(xs), *[dst_one] * 2)
+    dst = dataclasses.replace(dst, k_feat=dst.k_feat + 9.0)  # stale content
+    n = 5
+    src_one = init_cache(cfg, 1, n, jnp.float32)
+    src = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[FeatureMajorKV(k_feat=src_one.k_feat + 7.0,
+                                        v=src_one.v + 3.0)] * 2)
+    out = dst.insert_slot(src, slot=2, max_len=16)
+    assert isinstance(out, FeatureMajorKV)
+    assert out.k_feat.shape == dst.k_feat.shape
+    assert (np.asarray(out.k_feat[:, 2, :, :, :n]) == 7.0).all()
+    assert (np.asarray(out.k_feat[:, 2, :, :, n:]) == 0.0).all()  # tail zeroed
+    assert (np.asarray(out.v[:, 2, :, :n]) == 3.0).all()    # v token axis 3
+    assert (np.asarray(out.v[:, 2, :, n:]) == 0.0).all()
+    assert (np.asarray(out.k_feat[:, 0]) == 9.0).all()      # other slots
+
+
 def test_realized_bytes_match_formula_for_packed_gqa():
     """The satellite assertion: the typed caches actually allocated realize
-    exactly cache_bytes_per_token (uint8-packed indices) for GQA layouts."""
+    exactly cache_bytes_per_token — uint8-packed GQA indices, the dense
+    feature-major image, AND the packed MLA sparse latent (the old
+    dense-layout proxy gap is gone)."""
     for name in ("gpt2-small", "gpt2-small-sfa8", "qwen3-0.6b-sfa16"):
         cfg = get_config(name)
         a = cfg.attention
@@ -86,10 +161,13 @@ def test_realized_bytes_match_formula_for_packed_gqa():
         analytic = cache_bytes_per_token(cfg)[key]
         realized = realized_cache_bytes_per_token(cfg, max_len=64)
         assert realized == analytic, (name, realized, analytic)
-    # MLA+SFA XLA-proxy keeps the sparse latent in dense layout: strictly
-    # more bytes than the packed analytic model (gap reported, not hidden)
+    # persistent feature-major image: dense-K bytes at rest, exactly
+    fm_cfg = _fm_cfg("gpt2-small-sfa8")
+    assert realized_cache_bytes_per_token(fm_cfg, max_len=64) == \
+        cache_bytes_per_token(fm_cfg)["fm"]
+    # packed MLA sparse latent: realized == analytic, no proxy gap
     mla = get_config("deepseek-v2-236b")
-    assert realized_cache_bytes_per_token(mla, max_len=64) > \
+    assert realized_cache_bytes_per_token(mla, max_len=64) == \
         cache_bytes_per_token(mla)["sfa"]
 
 
@@ -100,3 +178,23 @@ def test_registered_pytree_roundtrip():
     assert stacked.k_vals.shape[0] == 2
     leaves, treedef = jax.tree_util.tree_flatten(c)
     assert isinstance(jax.tree_util.tree_unflatten(treedef, leaves), SparseKV)
+
+
+def test_new_types_pytree_and_jit_roundtrip():
+    """FeatureMajorKV and packed MLASparseKV are registered pytrees that
+    survive stack / flatten / jit boundaries unchanged."""
+    fm = init_cache(_fm_cfg().reduced(), 1, 4, jnp.float32)
+    mla = init_cache(get_config("deepseek-v2-236b").reduced(), 1, 4,
+                     jnp.float32)
+    for c, typ in ((fm, FeatureMajorKV), (mla, MLASparseKV)):
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), c, c)
+        assert isinstance(stacked, typ)
+        leaves, treedef = jax.tree_util.tree_flatten(c)
+        assert isinstance(jax.tree_util.tree_unflatten(treedef, leaves), typ)
+        out = jax.jit(lambda x: jax.tree.map(lambda a: a + 1, x))(c)
+        assert isinstance(out, typ)
+        for a, b in zip(jax.tree.leaves(c), jax.tree.leaves(out)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+    # packed dtype is preserved through the jit boundary
+    out = jax.jit(lambda x: x)(mla)
+    assert out.ckv_sp_idx.dtype == mla.ckv_sp_idx.dtype

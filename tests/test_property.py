@@ -13,6 +13,9 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import sparsify, densify, topk_mask, topk_st
+from repro.core.kv_cache import (
+    MLASparseKV, idx_bytes, idx_dtype, pack_indices, unpack_indices,
+)
 from repro.core.sparse import to_feature_major
 from repro.serve.kv_cache import memory_ratio_appendix_j, sparse_k_bytes, \
     dense_k_bytes
@@ -80,6 +83,54 @@ def test_feature_major_transpose_roundtrip(x, k):
     code = sparsify(x, k)
     fm = to_feature_major(code)                      # (d, n)
     np.testing.assert_array_equal(np.asarray(fm.T), np.asarray(densify(code)))
+
+
+# the at-rest packing boundaries: uint8 addresses d <= 256 coordinates
+# (ids 0..255), uint16 d <= 65536 — one off in either direction and decode
+# reads garbage indices, so hammer exactly the fence posts
+_DTYPE_BOUNDARY_DIMS = [255, 256, 257, 65535, 65536]
+
+
+@given(st.sampled_from(_DTYPE_BOUNDARY_DIMS), st.integers(0, 2**31 - 1),
+       st.integers(1, 16))
+def test_pack_unpack_roundtrip_at_dtype_boundaries(d, seed, k):
+    """pack_indices/unpack_indices roundtrip exactly for arbitrary valid
+    coordinate ids at every dtype boundary, including the extreme ids 0 and
+    d-1, and the packed dtype is the smallest that can address d."""
+    rng = np.random.RandomState(seed % 2**32)
+    idx = jnp.asarray(rng.randint(0, d, size=(3, k)), jnp.int32)
+    packed = pack_indices(idx, d)
+    assert packed.dtype == idx_dtype(d)
+    assert jnp.dtype(packed.dtype).itemsize == idx_bytes(d)
+    np.testing.assert_array_equal(np.asarray(unpack_indices(packed)),
+                                  np.asarray(idx))
+    edges = jnp.array([[0, d - 1]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_indices(pack_indices(edges, d))),
+        np.asarray(edges))
+
+
+@given(st.sampled_from(_DTYPE_BOUNDARY_DIMS), st.integers(0, 2**31 - 1))
+def test_mla_latent_axis_packing_roundtrips(r, seed):
+    """The packed MLASparseKV latent codes roundtrip through a cache write:
+    int32 compute indices pack to the at-rest dtype chosen by the latent
+    rank r and unpack unchanged — at every dtype boundary."""
+    b, n, k = 2, 4, 3
+    rng = np.random.RandomState(seed % 2**32)
+    cache = MLASparseKV(
+        ckv=jnp.zeros((b, n, 8), jnp.float32),
+        kpe=jnp.zeros((b, n, 4), jnp.float32),
+        ckv_sp_vals=jnp.zeros((b, n, k), jnp.float32),
+        ckv_sp_idx=jnp.zeros((b, n, k), idx_dtype(r)))
+    idx = jnp.asarray(rng.randint(0, r, size=(b, 1, k)), jnp.int32)
+    pos = jnp.asarray(rng.randint(0, n, size=(b,)), jnp.int32)   # ragged
+    c2 = cache.write(pos, ckv_sp_vals=jnp.ones((b, 1, k), jnp.float32),
+                     ckv_sp_idx=idx)
+    assert c2.ckv_sp_idx.dtype == idx_dtype(r)   # packed on write, at rest
+    got = np.asarray(unpack_indices(c2.ckv_sp_idx))
+    for i in range(b):
+        np.testing.assert_array_equal(got[i, int(pos[i])],
+                                      np.asarray(idx[i, 0]))
 
 
 @given(st.sampled_from([32, 64, 128, 256, 1024]), st.integers(1, 64))
