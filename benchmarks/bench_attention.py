@@ -12,8 +12,15 @@ memory-bound regimes the paper targets (decode / long context):
 The derived column is the dense/SFA byte ratio — the paper's Table 9 speedup
 driver (their own Table 7 shows the GPU kernel is bandwidth-bound too). The
 backward byte model is in DESIGN.md §3: the bwd reads the same O(nk) codes
-plus dO/O/lse and writes dense dQ/dK/dV, so its byte ratio is lower than the
-forward's but still > 1 for k ≪ d.
+plus dO/O/lse, and writes either dense dQ/dK (``emit="dense"``) or the
+compact (n, k) code-gradients (``emit="compact"`` — 8× fewer dQ+dK write
+bytes at d=64, k=8). The bwd rows time both emits (``compact_us`` vs the
+dense-attention ``dense_us``) and ASSERT the realized kernel output bytes
+match the analytic write model, kvreal-style.
+
+Runs standalone as the CI fast-lane smoke (``python
+benchmarks/bench_attention.py --smoke``): tiny shapes, same kernel
+signatures — drift breaks PRs, not nightlies.
 """
 from __future__ import annotations
 
@@ -51,13 +58,22 @@ def dense_bytes(n: int, d: int, dv: int) -> float:
     return n * d * 2 * 2 + n * dv * 2 * 2
 
 
-def sfa_bwd_bytes(n: int, d: int, k: int, dv: int) -> float:
+def sfa_bwd_write_bytes(n: int, d: int, k: int, dv: int,
+                        emit: str = "dense") -> float:
+    """Per-(bh) bwd HBM write bytes: dQ+dK in the chosen emit layout + dense
+    dV. Compact emit writes the (n, k) code-gradients only."""
+    if emit == "compact":
+        return 2 * n * k * 2 + n * dv * 2
+    return 2 * n * d * 2 + n * dv * 2
+
+
+def sfa_bwd_bytes(n: int, d: int, k: int, dv: int,
+                  emit: str = "dense") -> float:
     """Per-(bh) bwd HBM bytes (DESIGN.md §3): codes ×2 passes + dO/O/V/lse
-    reads + dense dQ/dK/dV writes (ST grads land on k coords but are emitted
-    in dense layout)."""
+    reads + dQ/dK/dV writes in the chosen emit layout (ST grads always land
+    on the k stored coords; ``emit`` only picks the written form)."""
     reads = 2 * n * k * (2 + 2) * 2 + 3 * n * dv * 2 + 2 * n * 4
-    writes = 2 * n * d * 2 + n * dv * 2
-    return reads + writes
+    return reads + sfa_bwd_write_bytes(n, d, k, dv, emit)
 
 
 def dense_bwd_bytes(n: int, d: int, dv: int) -> float:
@@ -90,11 +106,19 @@ def _xla_gather_decode(q, kv, ki, v, lengths, scale):
     return jnp.einsum("bn,bnd->bd", pr, v)
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, smoke: bool = False):
+    # closed-form pin of the ISSUE-4 write model (once, not per shape): the
+    # per-shape loop asserts REALIZED kernel output bytes == this function
+    assert sfa_bwd_write_bytes(512, 64, 8, 64, "compact") == \
+        2 * 512 * 8 * 2 + 512 * 64 * 2
+    assert sfa_bwd_write_bytes(512, 64, 8, 64, "dense") == \
+        2 * 512 * 64 * 2 + 512 * 64 * 2
     rows = []
     rng = jax.random.PRNGKey(0)
     ns = [256, 512] if quick else [256, 512, 1024, 2048]
     configs = [(64, 8), (64, 4), (128, 16), (128, 8)]
+    if smoke:                       # CI fast-lane: signatures, not trends
+        ns, configs = [128], [(64, 8)]
     bh = 2
     for n in ns:
         for d, k in configs:
@@ -118,25 +142,55 @@ def run(quick: bool = True):
             rows.append((f"attn_n{n}_d{d}_k{k}", t_sfa,
                          f"dense_us={t_dense:.0f};byte_ratio={br:.2f};"
                          f"tpu_model_speedup={tpu_dense / tpu_sfa:.2f}"))
-            # backward kernels (recompute-in-tile; residuals from the fwd)
+            # backward kernels (recompute-in-tile; residuals from the fwd),
+            # both emit layouts: dense (n, d) rows vs compact (n, k) codes
             o_sfa, lse_sfa = flash_sfa(qv, qi, kv_, ki, v, d=d,
                                        return_residuals=True)
             t_sfa_b = _time(lambda *a: flash_sfa_bwd(*a, d=d, block_q=128,
                                                      block_k=128),
                             qv, qi, kv_, ki, v, o_sfa, lse_sfa, g)
+            t_compact_b = _time(
+                lambda *a: flash_sfa_bwd(*a, d=d, block_q=128, block_k=128,
+                                         emit="compact"),
+                qv, qi, kv_, ki, v, o_sfa, lse_sfa, g)
             o_d, lse_d = flash_attention(q, kk, v, return_residuals=True)
             t_dense_b = _time(
                 lambda *a: flash_attention_bwd(*a, block_q=128, block_k=128),
                 q, kk, v, o_d, lse_d, g)
+            # realized kernel write traffic == analytic model (kvreal-style):
+            # element counts from the actual output shapes × the 2-byte
+            # at-rest activation width the byte model assumes
+            for emit, outs in (
+                ("dense", flash_sfa_bwd(qv, qi, kv_, ki, v, o_sfa, lse_sfa,
+                                        g, d=d)),
+                ("compact", flash_sfa_bwd(qv, qi, kv_, ki, v, o_sfa, lse_sfa,
+                                          g, d=d, emit="compact")),
+            ):
+                realized = sum(x.size for x in outs) // bh * 2
+                analytic = sfa_bwd_write_bytes(n, d, k, d, emit)
+                assert realized == analytic, (emit, realized, analytic)
             bw_br = dense_bwd_bytes(n, d, d) / sfa_bwd_bytes(n, d, k, d)
+            bw_br_c = dense_bwd_bytes(n, d, d) / sfa_bwd_bytes(n, d, k, d,
+                                                               "compact")
             bwd_flops = 2.5 * attn_flops(n, d, d)         # FA2: ~2.5× fwd
             tpu_dense_b = max(bwd_flops / PEAK_FLOPS,
                               dense_bwd_bytes(n, d, d) / HBM_BW) * 1e6
             tpu_sfa_b = max(bwd_flops / PEAK_FLOPS,
                             sfa_bwd_bytes(n, d, k, d) / HBM_BW) * 1e6
+            tpu_sfa_bc = max(bwd_flops / PEAK_FLOPS,
+                             sfa_bwd_bytes(n, d, k, d, "compact") / HBM_BW
+                             ) * 1e6
             rows.append((f"attn_bwd_n{n}_d{d}_k{k}", t_sfa_b,
-                         f"dense_us={t_dense_b:.0f};byte_ratio={bw_br:.2f};"
-                         f"tpu_model_speedup={tpu_dense_b / tpu_sfa_b:.2f}"))
+                         f"dense_us={t_dense_b:.0f};"
+                         f"compact_us={t_compact_b:.0f};"
+                         f"byte_ratio={bw_br:.2f};"
+                         f"byte_ratio_compact={bw_br_c:.2f};"
+                         f"write_B_dense={sfa_bwd_write_bytes(n, d, k, d):.0f};"
+                         f"write_B_compact="
+                         f"{sfa_bwd_write_bytes(n, d, k, d, 'compact'):.0f};"
+                         f"tpu_model_speedup={tpu_dense_b / tpu_sfa_b:.2f};"
+                         f"tpu_model_speedup_compact="
+                         f"{tpu_dense_b / tpu_sfa_bc:.2f}"))
     # serving decode backends (registry names): token-major flash_sfa_decode
     # vs feature-major flash_sfa_decode_fm vs the XLA gather oracle, one
     # query against an n-token sparse cache. CPU interpret-mode wall-clock
@@ -145,8 +199,8 @@ def run(quick: bool = True):
     # serving path; fm_remat_us re-materializes the image from token-major
     # codes before the kernel — the retired pre-FeatureMajorKV per-step
     # cost, kept measured so the win stays visible.
-    for n in ([512] if quick else [512, 2048]):
-        for d, k in ((64, 8), (128, 8)):
+    for n in ([128] if smoke else [512] if quick else [512, 2048]):
+        for d, k in (((64, 8),) if smoke else ((64, 8), (128, 8))):
             kk_ = jax.random.normal(jax.random.fold_in(rng, 4), (bh, n, d))
             q1 = jax.random.normal(jax.random.fold_in(rng, 5), (bh, d))
             v1 = jax.random.normal(jax.random.fold_in(rng, 6), (bh, n, d))
@@ -185,3 +239,16 @@ def run(quick: bool = True):
                          f"tpu_model_remat_extra_us="
                          f"{remat_bytes / HBM_BW * 1e6:.3f}"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes: CI signature/assert smoke, not perf")
+    ap.add_argument("--full", action="store_true", help="full sweeps")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(quick=not args.full, smoke=args.smoke):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)

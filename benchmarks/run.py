@@ -9,10 +9,19 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
     bench_topk       -> Table 8 (RTopK overhead share)
     bench_pretrain   -> Table 1 (dense vs short-embedding vs SFA parity)
     bench_niah       -> Table 2 / Appendix K (NIAH accuracy & generalization)
+
+The attention suite additionally appends a snapshot (fwd+bwd+decode rows
+with their analytic byte models, git SHA, UTC timestamp) to
+``BENCH_attention.json`` at the repo root, so the perf trajectory
+accumulates run over run instead of scrolling away in CI logs.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import pathlib
+import subprocess
 import sys
 import time
 
@@ -28,12 +37,57 @@ SUITES = {
     "niah": bench_niah,
 }
 
+SNAPSHOT_SUITES = ("attention",)
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=pathlib.Path(__file__).resolve().parent, check=True,
+        ).stdout.strip()
+    except Exception:                                  # noqa: BLE001
+        return "unknown"
+
+
+def write_snapshot(suite: str, rows, *, full: bool,
+                   path: pathlib.Path | None = None) -> pathlib.Path:
+    """Append one benchmark run to the suite's JSON trajectory file.
+
+    Each entry is self-describing: git SHA, UTC timestamp, sweep mode, and
+    the raw rows (the ``derived`` field carries the analytic byte models
+    alongside the measured microseconds)."""
+    if path is None:
+        path = (pathlib.Path(__file__).resolve().parent.parent
+                / f"BENCH_{suite}.json")
+    try:
+        history = json.loads(path.read_text()) if path.exists() else []
+    except (json.JSONDecodeError, OSError) as e:
+        # a killed run must not poison every future run: start fresh
+        print(f"# {path.name} unreadable ({e}); starting a new trajectory",
+              file=sys.stderr, flush=True)
+        history = []
+    history.append({
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                     .isoformat(timespec="seconds"),
+        "mode": "full" if full else "quick",
+        "rows": [{"name": r[0], "us_per_call": round(float(r[1]), 1),
+                  "derived": r[2]} for r in rows],
+    })
+    tmp = path.with_suffix(".json.tmp")               # atomic replace
+    tmp.write_text(json.dumps(history, indent=1) + "\n")
+    tmp.replace(path)
+    return path
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full sweeps (default: quick)")
     ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument("--no-snapshot", action="store_true",
+                    help="skip appending to BENCH_<suite>.json")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -46,6 +100,10 @@ def main() -> None:
             rows = mod.run(quick=not args.full)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+            if name in SNAPSHOT_SUITES and not args.no_snapshot:
+                path = write_snapshot(name, rows, full=args.full)
+                print(f"# snapshot appended to {path.name}",
+                      file=sys.stderr, flush=True)
         except Exception as e:                         # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)

@@ -44,6 +44,15 @@ class AttentionConfig:
     # serving decode path: "pallas" = token-major flash_sfa_decode,
     # "pallas_fm" = feature-major flash_sfa_decode_fm, "xla" = gather oracle
     decode_backend: str = "auto"     # "xla" | "pallas" | "pallas_fm" | "auto"
+    # FlashSFA backward emit layout (DESIGN.md §3): "dense" writes dQ/dK as
+    # (n, d) rows; "compact" writes (n, k) value-gradients aligned to the
+    # stored indices — O(n·k) backward write traffic. On an eligible train
+    # layer (pallas backend, no rope/qk-norm/window/rope-protect/distill)
+    # the fused projection seam in models/attention.py consumes the codes
+    # directly via kernels/code_grad.py, so no dense dQ/dK ever round-trips
+    # through HBM; elsewhere "compact" is honored at the op level (kernel
+    # writes compact, scattered back for the generic vjp contract).
+    bwd_emit: str = "dense"          # "dense" | "compact"
     # SFA-on-RoPE handling (paper A.1): keep a few leading dims dense so
     # position info survives sparsification; 0 = sparsify everything.
     sfa_rope_protect: int = 0

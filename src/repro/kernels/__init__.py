@@ -2,8 +2,11 @@
 
 rtopk            — exact RTopK-TPU row top-k (bit-pattern bisection)
 flash_sfa        — IO-sparse compute-dense tiled SFA attention (prefill)
-flash_sfa_bwd    — FlashSFA backward (recompute-in-tile, Eq. 6 ST grads)
+flash_sfa_bwd    — FlashSFA backward (recompute-in-tile, Eq. 6 ST grads,
+                   dense or compact (n, k) emit)
 flash_attention_bwd — dense FlashAttention backward (same skeleton)
+code_grad        — compact code-gradient consumers: scatter_code_grads XLA
+                   oracle + sparse-grad × dense matmul kernels (dx/dW)
 flash_sfa_decode — token-major sparse-KV decode (paper layout)
 flash_sfa_decode_fm — feature-major decode (beyond-paper layout)
 feature_major_prefill — prefill-write for the persistent FeatureMajorKV image
@@ -12,6 +15,9 @@ ops              — jitted wrappers + XLA/Pallas dispatch, custom_vjp training
 ref              — pure-jnp oracles for all of the above
 """
 from repro.kernels.rtopk import rtopk
+from repro.kernels.code_grad import (
+    code_grad_dw, code_grad_dx, scatter_code_grads,
+)
 from repro.kernels.flash_sfa import flash_sfa
 from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, flash_attention_bwd
 from repro.kernels.flash_sfa_decode import (
@@ -21,5 +27,6 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import sfa_attention_op, dense_attention_op
 
 __all__ = ["rtopk", "flash_sfa", "flash_sfa_bwd", "flash_attention_bwd",
+           "code_grad_dw", "code_grad_dx", "scatter_code_grads",
            "flash_sfa_decode", "flash_sfa_decode_fm", "feature_major_prefill",
            "flash_attention", "sfa_attention_op", "dense_attention_op"]

@@ -11,10 +11,19 @@ materializing the (n, n) score matrix — and accumulates
     dS_ij = P_ij (dP_ij − D_i) · scale,  dP = dO Vᵀ,  D_i = Σ(dO_i ∘ O_i)
     dQ_i  = Σ_j dS_ij K̃_j,   dK_j = Σ_i dS_ijᵀ Q̃_i
 
-in VMEM scratch across the sequential grid axis. dQ/dK are masked in-kernel
-to the k stored coordinates of each row's code (scatter-free: the support
-mask is rebuilt from the indices, so gradients land exactly on the paper's
-Eq. 6 straight-through support — no XLA scatter, no dense-gradient fallback).
+in VMEM scratch across the sequential grid axis. Straight-through (paper
+Eq. 6) gradients land exactly on the k stored coordinates of each row's code,
+scatter-free, in one of two emit layouts (``emit=``):
+
+  * ``"dense"``   — the accumulator is masked to the rebuilt support and
+                    written as (block, d) rows: dQ/dK come out dense (n, d).
+  * ``"compact"`` — the accumulator is *gathered* down to (block, k) on the
+                    stored indices before the single HBM write: dQ̃/dK̃ come
+                    out as (n, k) value-gradients aligned to the (n, k) int32
+                    index tensors the forward already stores. Backward write
+                    traffic for dQ+dK drops from 2·n·d·2 to 2·n·k·2 bytes
+                    (8× at d=64, k=8 — DESIGN.md §3); kernels/code_grad.py
+                    consumes the codes downstream without ever re-scattering.
 
 Two kernels, as in the standard TPU flash backward: a dQ kernel whose grid
 parallelizes over q blocks and scans kv blocks, and a dK/dV kernel whose grid
@@ -51,6 +60,22 @@ def _support_mask(idx: jax.Array, d: int) -> jax.Array:
     return m
 
 
+def _gather_support(acc: jax.Array, idx: jax.Array) -> jax.Array:
+    """(b, d) dense accumulator -> (b, k) values at the stored coordinates.
+
+    The inverse of ``_densify_block``: k iota-compare passes, each a masked
+    row-reduction over the (b, d) tile — no gather op, no scatter, and the
+    dense accumulator never leaves VMEM."""
+    b, d = acc.shape
+    k = idx.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, d), 1)
+    cols = []
+    for t in range(k):
+        hit = (iota == idx[:, t][:, None]).astype(jnp.float32)
+        cols.append(jnp.sum(acc * hit, axis=1, keepdims=True))
+    return jnp.concatenate(cols, axis=1)
+
+
 def _tile_p_ds(qd, kd, do, vb, lse, delta, *, scale, rows, cols, nk_real,
                causal):
     """Shared backward tile math: normalized P and dS for one (bq, bk) tile."""
@@ -68,32 +93,38 @@ def _tile_p_ds(qd, kd, do, vb, lse, delta, *, scale, rows, cols, nk_real,
     return p, ds
 
 
-def _unpack(refs, d, sparse):
-    """Split kernel refs into (load_q, load_k, q_mask_fn, k_mask_fn, rest).
+def _unpack(refs, d, sparse, emit):
+    """Split kernel refs into (load_q, load_k, q_emit_fn, k_emit_fn, rest).
 
     sparse: refs = (qv, qi, kv, ki, *rest) — densify in VMEM (lazily, only
-    for live tiles), mask grads to the stored support.
-    dense: refs = (q, k, *rest) — identity load, no mask.
+    for live tiles); the emit fns turn the dense (block, d) accumulator into
+    the written form — support-masked dense rows (``emit="dense"``) or the
+    (block, k) gathered code values (``emit="compact"``).
+    dense: refs = (q, k, *rest) — identity load, identity emit.
     """
     if sparse:
         qv_ref, qi_ref, kv_ref, ki_ref, *rest = refs
         load_q = lambda: _densify_block(qv_ref[0], qi_ref[0], d)
         load_k = lambda: _densify_block(kv_ref[0], ki_ref[0], d)
-        q_mask = lambda x: x * _support_mask(qi_ref[0], d)
-        k_mask = lambda x: x * _support_mask(ki_ref[0], d)
+        if emit == "compact":
+            q_emit = lambda x: _gather_support(x, qi_ref[0])
+            k_emit = lambda x: _gather_support(x, ki_ref[0])
+        else:
+            q_emit = lambda x: x * _support_mask(qi_ref[0], d)
+            k_emit = lambda x: x * _support_mask(ki_ref[0], d)
     else:
         q_ref, k_ref, *rest = refs
         load_q = lambda: q_ref[0].astype(jnp.float32)
         load_k = lambda: k_ref[0].astype(jnp.float32)
-        q_mask = k_mask = lambda x: x
-    return load_q, load_k, q_mask, k_mask, rest
+        q_emit = k_emit = lambda x: x
+    return load_q, load_k, q_emit, k_emit, rest
 
 
 def _bwd_dq_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
-                   block_k: int, nk_real: int, sparse: bool):
+                   block_k: int, nk_real: int, sparse: bool, emit: str):
     qb, kb = pl.program_id(1), pl.program_id(2)
     nkb = pl.num_programs(2)
-    load_q, load_k, q_mask, _, rest = _unpack(refs, d, sparse)
+    load_q, load_k, q_emit, _, rest = _unpack(refs, d, sparse, emit)
     v_ref, do_ref, lse_ref, delta_ref, dq_ref, dq_acc = rest
 
     @pl.when(kb == 0)
@@ -121,15 +152,16 @@ def _bwd_dq_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
 
     @pl.when(kb == nkb - 1)
     def _finalize():
-        # Scatter-free straight-through: grads only on the stored coords.
-        dq_ref[0, ...] = q_mask(dq_acc[...]).astype(dq_ref.dtype)
+        # Scatter-free straight-through: grads only on the stored coords —
+        # masked dense rows, or the gathered (block, k) code values.
+        dq_ref[0, ...] = q_emit(dq_acc[...]).astype(dq_ref.dtype)
 
 
 def _bwd_dkv_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
-                    block_k: int, nk_real: int, sparse: bool):
+                    block_k: int, nk_real: int, sparse: bool, emit: str):
     kb, qb = pl.program_id(1), pl.program_id(2)
     nqb = pl.num_programs(2)
-    load_q, load_k, _, k_mask, rest = _unpack(refs, d, sparse)
+    load_q, load_k, _, k_emit, rest = _unpack(refs, d, sparse, emit)
     v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc = rest
 
     @pl.when(qb == 0)
@@ -161,12 +193,12 @@ def _bwd_dkv_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
 
     @pl.when(qb == nqb - 1)
     def _finalize():
-        dk_ref[0, ...] = k_mask(dk_acc[...]).astype(dk_ref.dtype)
+        dk_ref[0, ...] = k_emit(dk_acc[...]).astype(dk_ref.dtype)
         dv_ref[0, ...] = dv_acc[...].astype(dv_ref.dtype)
 
 
 def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
-              block_k, interpret, sparse):
+              block_k, interpret, sparse, emit="dense"):
     """Shared scaffolding for both backwards.
 
     q_ops/k_ops: (vals, idx) code pairs when sparse, (dense,) when not —
@@ -202,17 +234,20 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
                  pl.BlockSpec((1, block_q), lambda *a: qmap(*a)[:2])])  # delta
 
     kw = dict(d=d, scale=scale, causal=causal, block_q=block_q,
-              block_k=block_k, nk_real=nk, sparse=sparse)
+              block_k=block_k, nk_real=nk, sparse=sparse, emit=emit)
     cparams = CompilerParams(
         dimension_semantics=("parallel", "parallel", "arbitrary"))
     operands = (*q_ops, *k_ops, v, g, lse, delta)
+    # compact emit shrinks the dQ/dK output rows from d to the code width
+    dq_w = q_ops[0].shape[-1] if emit == "compact" else d
+    dk_w = k_ops[0].shape[-1] if emit == "compact" else d
 
     dq = pl.pallas_call(
         functools.partial(_bwd_dq_kernel, **kw),
         grid=(bh, nqp // block_q, nkp // block_k),
         in_specs=specs(lambda b, i, j: (b, i, 0), lambda b, i, j: (b, j, 0)),
-        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, nqp, d), q_ops[0].dtype),
+        out_specs=pl.BlockSpec((1, block_q, dq_w), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nqp, dq_w), q_ops[0].dtype),
         scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
         compiler_params=cparams, interpret=interpret,
     )(*operands)
@@ -222,11 +257,11 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
         grid=(bh, nkp // block_k, nqp // block_q),
         in_specs=specs(lambda b, j, i: (b, i, 0), lambda b, j, i: (b, j, 0)),
         out_specs=[
-            pl.BlockSpec((1, block_k, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dk_w), lambda b, j, i: (b, j, 0)),
             pl.BlockSpec((1, block_k, dv_dim), lambda b, j, i: (b, j, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bh, nkp, d), k_ops[0].dtype),
+            jax.ShapeDtypeStruct((bh, nkp, dk_w), k_ops[0].dtype),
             jax.ShapeDtypeStruct((bh, nkp, dv_dim), v.dtype),
         ],
         scratch_shapes=[
@@ -239,20 +274,30 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "d", "causal", "scale", "block_q", "block_k", "interpret"))
+    "d", "causal", "scale", "block_q", "block_k", "interpret", "emit"))
 def flash_sfa_bwd(q_vals, q_idx, k_vals, k_idx, v, o, lse, g, *, d: int,
                   causal: bool = True, scale: float | None = None,
                   block_q: int = 128, block_k: int = 128,
-                  interpret: bool = True):
+                  interpret: bool = True, emit: str = "dense"):
     """FlashSFA backward. Codes: (bh, n, k); v/o/g: (bh, n, dv); lse: (bh, n).
 
-    Returns (dq, dk, dv): dq/dk are dense (bh, n, d) gradients supported only
-    on each row's k stored coordinates (paper Eq. 6 straight-through — i.e.
-    the gradient w.r.t. the pre-Topk dense Q/K), dv is dense (bh, n, dv).
+    Returns (dq, dk, dv), all supported only on each row's k stored
+    coordinates (paper Eq. 6 straight-through — i.e. the gradient w.r.t. the
+    pre-Topk dense Q/K); dv is dense (bh, n, dv). The dQ/dK layout follows
+    ``emit``:
+
+      * ``"dense"``   — (bh, n, d) rows, zeros off-support (the oracle form).
+      * ``"compact"`` — (bh, n, k) value-gradients aligned index-for-index
+                        with ``q_idx``/``k_idx``; O(n·k) HBM write traffic.
+                        ``kernels.code_grad.scatter_code_grads`` is the
+                        exact inverse back to the dense form.
     """
+    if emit not in ("dense", "compact"):
+        raise ValueError(f"emit={emit!r}; expected 'dense' or 'compact'")
     return _bwd_impl([q_vals, q_idx], [k_vals, k_idx], v, o, lse, g, d=d,
                      causal=causal, scale=scale, block_q=block_q,
-                     block_k=block_k, interpret=interpret, sparse=True)
+                     block_k=block_k, interpret=interpret, sparse=True,
+                     emit=emit)
 
 
 @functools.partial(jax.jit, static_argnames=(

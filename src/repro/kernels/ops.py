@@ -22,6 +22,15 @@ on (batch, seq, heads, head_dim) activations, matching the signature of
 ``"pallas"`` (default, the kernel) or ``"xla"`` (full XLA re-execution of
 the forward via ``jax.vjp`` — kept as the gradient oracle for parity tests
 and as a fallback on backends without a Pallas lowering).
+
+``bwd_emit`` selects the Pallas backward's dQ/dK emit layout (DESIGN.md §3):
+``"dense"`` (n, d) rows, or ``"compact"`` (n, k) value-gradients which the
+kernel writes in O(n·k) bytes and this wrapper scatters back to the dense
+cotangents the custom_vjp contract requires. The scatter-free end-to-end
+consumer — the fused projection seam that feeds the compact codes straight
+into ``kernels/code_grad.py`` — lives in ``repro/models/attention.py``; this
+op-level mode is the generic correctness-preserving form (and what parity
+tests pin).
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as att
+from repro.kernels.code_grad import scatter_code_grads
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_sfa import flash_sfa
 from repro.kernels.flash_sfa_bwd import flash_sfa_bwd
@@ -39,12 +49,14 @@ from repro.kernels.rtopk import rtopk
 _ON_TPU = jax.default_backend() == "tpu"
 
 
-def _fold_heads(x):
+def fold_heads(x):
+    """(b, n, h, d) -> (b*h, n, d), h innermost — the kernels' batch layout."""
     b, n, h, d = x.shape
     return jnp.einsum("bnhd->bhnd", x).reshape(b * h, n, d)
 
 
-def _unfold_heads(x, b, h):
+def unfold_heads(x, b, h):
+    """Inverse of ``fold_heads``."""
     bh, n, d = x.shape
     return jnp.einsum("bhnd->bnhd", x.reshape(b, h, n, d))
 
@@ -52,23 +64,23 @@ def _unfold_heads(x, b, h):
 def _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale, return_residuals=False):
     """Shared primal body: fold -> rtopk -> flash_sfa (-> residuals)."""
     b, n, h, d = q.shape
-    qf, kf, vf = _fold_heads(q), _fold_heads(k), _fold_heads(v)
+    qf, kf, vf = fold_heads(q), fold_heads(k), fold_heads(v)
     qv, qi = rtopk(qf, sfa_k, interpret=not _ON_TPU)
     kv_, ki = rtopk(kf, sfa_k, interpret=not _ON_TPU)
     if not return_residuals:
         out = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
                         interpret=not _ON_TPU)
-        return _unfold_heads(out, b, h)
+        return unfold_heads(out, b, h)
     out, lse = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
                          interpret=not _ON_TPU, return_residuals=True)
     # The kernel backward needs only the codes + folded v + (out, lse); the
     # dense q/k/v are NOT saved (shapes/dtypes are recoverable from g and
     # the codes), keeping residual memory at the FA2 contract.
-    return _unfold_heads(out, b, h), (qv, qi, kv_, ki, vf, out, lse)
+    return unfold_heads(out, b, h), (qv, qi, kv_, ki, vf, out, lse)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _sfa_pallas(q, k, v, sfa_k, causal, scale, bwd):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _sfa_pallas(q, k, v, sfa_k, causal, scale, bwd, emit):
     return _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale)
 
 
@@ -76,14 +88,19 @@ def _sfa_xla(q, k, v, sfa_k, causal, scale):
     return att.sfa_attention(q, k, v, sfa_k=sfa_k, causal=causal, scale=scale)
 
 
-def _sfa_fwd(q, k, v, sfa_k, causal, scale, bwd):
+def _sfa_fwd(q, k, v, sfa_k, causal, scale, bwd, emit):
     if bwd == "xla":
         return _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale), (q, k, v)
-    return _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale,
-                           return_residuals=True)
+    out, res = _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale,
+                               return_residuals=True)
+    # Zero-size dtype carriers: the cotangents must come back in the
+    # ORIGINAL q/k/v dtypes, not the code-value dtypes (which would silently
+    # diverge if rtopk ever changed its output dtype).
+    protos = tuple(jnp.zeros((), x.dtype) for x in (q, k, v))
+    return out, res + (protos,)
 
 
-def _sfa_bwd(sfa_k, causal, scale, bwd, res, g):
+def _sfa_bwd(sfa_k, causal, scale, bwd, emit, res, g):
     if bwd == "xla":
         # Oracle/fallback: straight-through backward via full XLA
         # re-execution of the forward (paper Eq. 6 semantics).
@@ -91,15 +108,26 @@ def _sfa_bwd(sfa_k, causal, scale, bwd, res, g):
         _, vjp = jax.vjp(lambda q, k, v: _sfa_xla(q, k, v, sfa_k, causal,
                                                   scale), q, k, v)
         return vjp(g)
-    qv, qi, kv_, ki, vf, out, lse = res
+    qv, qi, kv_, ki, vf, out, lse, (qp, kp, vp) = res
     b, n, h, d = g.shape
-    gf = _fold_heads(g)
-    dqf, dkf, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf, d=d,
-                                  causal=causal, scale=scale,
-                                  interpret=not _ON_TPU)
-    return (_unfold_heads(dqf, b, h).astype(qv.dtype),
-            _unfold_heads(dkf, b, h).astype(kv_.dtype),
-            _unfold_heads(dvf, b, h).astype(vf.dtype))
+    gf = fold_heads(g)
+    if emit == "compact":
+        # The kernel writes O(n·k) code-gradients; the custom_vjp contract
+        # still owes dense (b, n, h, d) cotangents, so scatter here via the
+        # XLA oracle. The train path that never pays this scatter is the
+        # fused projection seam in repro/models/attention.py.
+        dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
+                                      d=d, causal=causal, scale=scale,
+                                      interpret=not _ON_TPU, emit="compact")
+        dqf = scatter_code_grads(dqc, qi, d)
+        dkf = scatter_code_grads(dkc, ki, d)
+    else:
+        dqf, dkf, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
+                                      d=d, causal=causal, scale=scale,
+                                      interpret=not _ON_TPU)
+    return (unfold_heads(dqf, b, h).astype(qp.dtype),
+            unfold_heads(dkf, b, h).astype(kp.dtype),
+            unfold_heads(dvf, b, h).astype(vp.dtype))
 
 
 _sfa_pallas.defvjp(_sfa_fwd, _sfa_bwd)
@@ -112,14 +140,15 @@ def _check_impl(name, value, allowed=("xla", "pallas")):
 
 def sfa_attention_op(q, k, v, *, sfa_k: int, causal: bool = True,
                      scale: float | None = None, impl: str = "xla",
-                     bwd_impl: str = "pallas"):
+                     bwd_impl: str = "pallas", bwd_emit: str = "dense"):
     """SFA attention on (b, n, h, d) activations. See module docstring."""
     _check_impl("impl", impl)
     _check_impl("bwd_impl", bwd_impl)
+    _check_impl("bwd_emit", bwd_emit, ("dense", "compact"))
     d = q.shape[-1]
     scale = scale if scale is not None else d ** -0.5
     if impl == "pallas":
-        return _sfa_pallas(q, k, v, sfa_k, causal, scale, bwd_impl)
+        return _sfa_pallas(q, k, v, sfa_k, causal, scale, bwd_impl, bwd_emit)
     return _sfa_xla(q, k, v, sfa_k, causal, scale)
 
 
@@ -132,8 +161,8 @@ def dense_attention_op(q, k, v, *, causal: bool = True,
     scale = scale if scale is not None else d ** -0.5
     if impl == "pallas":
         b, n, h, _ = q.shape
-        out = flash_attention(_fold_heads(q), _fold_heads(k), _fold_heads(v),
+        out = flash_attention(fold_heads(q), fold_heads(k), fold_heads(v),
                               causal=causal, scale=scale,
                               interpret=not _ON_TPU)
-        return _unfold_heads(out, b, h)
+        return unfold_heads(out, b, h)
     return att.chunked_attention(q, k, v, causal=causal, scale=scale)

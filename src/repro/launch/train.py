@@ -35,6 +35,13 @@ def main():
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--mesh", default="debug",
                     choices=["debug", "single-pod", "multi-pod"])
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["xla", "pallas", "auto"],
+                    help="override cfg.attention.backend for the step")
+    ap.add_argument("--bwd-emit", default=None,
+                    choices=["dense", "compact"],
+                    help="FlashSFA backward emit layout (DESIGN.md §3): "
+                         "compact = (n, k) code-gradients + projection seam")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,7 +61,8 @@ def main():
         dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                           global_batch=args.batch)
         step = jax.jit(
-            make_train_step(cfg, ocfg),
+            make_train_step(cfg, ocfg, attn_backend=args.attn_backend,
+                            bwd_emit=args.bwd_emit),
             in_shardings=(sh(pspec),
                           sh(type(opt)(step=P(), m=pspec, v=pspec)),
                           None),

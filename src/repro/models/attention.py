@@ -29,6 +29,7 @@ scoring plus densely for the value aggregation, and k_pe densely.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -42,12 +43,18 @@ from repro.core.kv_cache import (
 )
 from repro.core.sparse import topk_st, sparsify, SparseCode
 from repro.distributed.sharding import axis_size, constrain
+from repro.kernels.flash_sfa_bwd import flash_sfa_bwd
 from repro.kernels.flash_sfa_decode import LANES as _FM_TILE, \
     feature_major_prefill
+from repro.kernels.ops import (
+    _ON_TPU, _sfa_pallas_fwd, fold_heads,
+)
 from repro.models.backends import (
     AttentionRequest, DecodeQuery, expand_kv as _expand_kv, select_backend,
 )
-from repro.models.layers import dense, dense_init, norm_init, apply_norm, rope
+from repro.models.layers import (
+    dense, dense_init, norm_init, apply_norm, rope, sparse_proj_bwd,
+)
 
 
 def _pad_heads(q, num_heads: int):
@@ -136,6 +143,112 @@ def _request(a: AttentionConfig, *, mode: str, window) -> AttentionRequest:
 
 
 # --------------------------------------------------------------------------
+# fused projection + attention seam for compact code-gradients
+# --------------------------------------------------------------------------
+
+def compact_train_eligible(cfg: ModelConfig, window=None) -> bool:
+    """True when a train-mode layer can take the fused compact-backward seam.
+
+    The seam spans the QKV projection through the FlashSFA kernels in one
+    custom_vjp, so everything in between must be identity: RoPE and qk-norm
+    rotate/rescale the cotangent off the stored top-k support (a k-sparse
+    post-rope gradient is 2k-sparse pre-rope, unaligned to the indices), and
+    windows / rope-protect / MLA / distill need the dense q/k/v outside the
+    seam. The seam also skips the ``_constrain_qkv`` sharding annotations,
+    so it only engages on an unsharded model axis — under tensor parallelism
+    the layer falls back to the constrained path below (op-level compact
+    emit). Ineligible ``bwd_emit="compact"`` layers still get the compact
+    kernel emit at the op level (ops.py scatters for the generic vjp)."""
+    a = cfg.attention
+    return (a is not None and a.sfa_k is not None
+            and a.bwd_emit == "compact" and a.mla is None
+            and not a.rope and not a.qk_norm
+            and window is None and a.window is None
+            and a.sfa_rope_protect == 0 and cfg.sfa_distill <= 0
+            and axis_size("model") == 1)
+
+
+def _sfa_proj_attend_fwd_impl(w, x, h, hkv, hd, sfa_k, causal, scale):
+    """Primal: qkv projection -> GQA expand -> ops.py's pallas primal
+    (one source of truth for the rtopk -> FlashSFA dispatch)."""
+    b, n, _ = x.shape
+    dt = x.dtype
+    qkv = x @ w.astype(dt)
+    q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
+    q = q.reshape(b, n, h, hd)
+    k = _expand_kv(k.reshape(b, n, hkv, hd), h)
+    v = _expand_kv(v.reshape(b, n, hkv, hd), h)
+    out, res = _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale,
+                               return_residuals=True)
+    return out, (x, w) + res
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _sfa_proj_attend_compact(w, x, h, hkv, hd, sfa_k, causal, scale):
+    """Fused QKV-projection + SFA attention with a compact-code backward.
+
+    Forward is exactly the pallas train path (projection -> rtopk ->
+    FlashSFA). The backward runs ``flash_sfa_bwd(emit="compact")`` — O(n·k)
+    dQ̃/dK̃ writes — and hands the code-gradients straight to the projection
+    vjp seam (``layers.sparse_proj_bwd`` -> ``kernels/code_grad.py``): a
+    dense (n, d) dQ/dK is never materialized in HBM anywhere on this path
+    (grep-able contract, tests/test_code_grad.py)."""
+    out, _ = _sfa_proj_attend_fwd_impl(w, x, h, hkv, hd, sfa_k, causal, scale)
+    return out
+
+
+def _sfa_proj_attend_fwd(w, x, h, hkv, hd, sfa_k, causal, scale):
+    return _sfa_proj_attend_fwd_impl(w, x, h, hkv, hd, sfa_k, causal, scale)
+
+
+def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, res, g):
+    x, w, qv, qi, kv_, ki, vf, out, lse = res
+    b, n, _, _ = g.shape
+    m = x.shape[-1]
+    group = h // hkv
+    interp = not _ON_TPU
+    gf = fold_heads(g)
+    dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf, d=hd,
+                                  causal=causal, scale=scale,
+                                  interpret=interp, emit="compact")
+    kq = dqc.shape[-1]
+    # per-head code-grad stacks over the flattened (b·n) token axis
+    dq_vals = (dqc.reshape(b, h, n, kq).transpose(1, 0, 2, 3)
+               .reshape(h, b * n, kq))
+    dq_idx = (qi.reshape(b, h, n, kq).transpose(1, 0, 2, 3)
+              .reshape(h, b * n, kq))
+    # GQA: the head repeat precedes rtopk, so group members carry identical
+    # indices — the group reduction is a plain aligned sum of code values
+    dk_vals = (dkc.reshape(b, hkv, group, n, kq).sum(2)
+               .transpose(1, 0, 2, 3).reshape(hkv, b * n, kq))
+    dk_idx = (ki.reshape(b, hkv, group, n, kq)[:, :, 0]
+              .transpose(1, 0, 2, 3).reshape(hkv, b * n, kq))
+    dv = dvf.reshape(b, hkv, group, n, hd).sum(2)            # (b, hkv, n, hd)
+    dv_flat = jnp.moveaxis(dv, 1, 2).reshape(b * n, hkv * hd)
+    x_flat = x.reshape(b * n, m)
+    wq_heads = jnp.moveaxis(w[:, :h * hd].reshape(m, h, hd), 1, 0)
+    wk_heads = jnp.moveaxis(
+        w[:, h * hd:(h + hkv) * hd].reshape(m, hkv, hd), 1, 0)
+    wv = w[:, (h + hkv) * hd:]
+    dx_q, dwq = sparse_proj_bwd(x_flat, wq_heads, dq_vals, dq_idx, d=hd,
+                                interpret=interp)
+    dx_k, dwk = sparse_proj_bwd(x_flat, wk_heads, dk_vals, dk_idx, d=hd,
+                                interpret=interp)
+    dv32 = dv_flat.astype(jnp.float32)
+    dx_v = dv32 @ wv.astype(jnp.float32).T
+    dwv = x_flat.astype(jnp.float32).T @ dv32
+    dw = jnp.concatenate(
+        [jnp.moveaxis(dwq, 0, 1).reshape(m, h * hd),
+         jnp.moveaxis(dwk, 0, 1).reshape(m, hkv * hd), dwv],
+        axis=1).astype(w.dtype)
+    dx = (dx_q + dx_k + dx_v).reshape(b, n, m).astype(x.dtype)
+    return dw, dx
+
+
+_sfa_proj_attend_compact.defvjp(_sfa_proj_attend_fwd, _sfa_proj_attend_bwd)
+
+
+# --------------------------------------------------------------------------
 # cache
 # --------------------------------------------------------------------------
 
@@ -219,6 +332,18 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
     b, n, d_model = x.shape
     h, hkv, hd = a.num_heads, a.num_kv_heads, a.head_dim
     dt = x.dtype
+    if mode == "train" and compact_train_eligible(cfg, window):
+        sel = select_backend(a.backend,
+                             _request(a, mode="full", window=window),
+                             where=f"{cfg.name}/attention")
+        if sel.backend.name == "pallas":
+            # fused projection+attention custom_vjp: the backward consumes
+            # the kernels' compact (n, k) code-gradients directly — no
+            # dense dQ/dK round-trip (DESIGN.md §3)
+            o = _sfa_proj_attend_compact(params["w_qkv"]["w"], x, h, hkv,
+                                         hd, a.sfa_k, a.causal, hd ** -0.5)
+            out = dense(params["w_o"], o.reshape(b, n, h * hd).astype(dt), dt)
+            return AttentionOut(out, None)
     qkv = dense(params["w_qkv"], x, dt)
     q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
     q = q.reshape(b, n, h, hd)
@@ -265,7 +390,7 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
     # k/v stay at hkv heads: the backend sparsifies first, then expands
     o = sel.backend.full(qp, kp, vp, num_heads=h_eff, sfa_k=a.sfa_k,
                          rope_protect=a.sfa_rope_protect, causal=a.causal,
-                         window=window, scale=scale)
+                         window=window, scale=scale, bwd_emit=a.bwd_emit)
     if pad_h:
         o = o[:, :, :h]
     distill = jnp.zeros((), jnp.float32)

@@ -137,9 +137,11 @@ class AttentionBackend:
 
     # entry points ------------------------------------------------------
     def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
-             window, scale):
+             window, scale, bwd_emit="dense"):
         """q: (b, n, h, d); k/v: (b, n, hkv, d) — the backend expands KV
-        heads itself (after any sparsification, so top-k runs at hkv)."""
+        heads itself (after any sparsification, so top-k runs at hkv).
+        ``bwd_emit`` is the FlashSFA backward emit layout (Pallas only;
+        the XLA oracle's autodiff has no dense/compact distinction)."""
         raise NotImplementedError(self.name)
 
     def decode(self, query: DecodeQuery, cache: KVCache, lengths, *,
@@ -222,7 +224,7 @@ class XLABackend(AttentionBackend):
                         differentiable=True)
 
     def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
-             window, scale):
+             window, scale, bwd_emit="dense"):
         if sfa_k is not None:
             # sparsify at hkv heads, BEFORE the GQA repeat (group-size-x
             # cheaper; expanded copies would re-run identical top-k rows)
@@ -340,13 +342,13 @@ class PallasBackend(AttentionBackend):
         return None
 
     def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
-             window, scale):
+             window, scale, bwd_emit="dense"):
         k = expand_kv(k, num_heads)
         v = expand_kv(v, num_heads)
         if sfa_k is not None:
             return sfa_attention_op(q, k, v, sfa_k=sfa_k, causal=causal,
                                     scale=scale, impl="pallas",
-                                    bwd_impl=self._bwd)
+                                    bwd_impl=self._bwd, bwd_emit=bwd_emit)
         return dense_attention_op(q, k, v, causal=causal, scale=scale,
                                   impl="pallas")
 

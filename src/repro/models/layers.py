@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.code_grad import code_grad_dw, code_grad_dx
+
 
 def _split(rng, n):
     return jax.random.split(rng, n)
@@ -25,6 +27,29 @@ def dense(params, x, dtype=None):
     if dtype is not None:
         w = w.astype(dtype)
     return x @ w
+
+
+def sparse_proj_bwd(x, w_heads, g_vals, g_idx, *, d: int,
+                    interpret: bool = True):
+    """Backward of a head-blocked projection ``y_h = x @ w_h`` whose upstream
+    cotangent arrives as compact (n, k) code-gradients (DESIGN.md §3).
+
+    This is the projection-side half of the ``bwd_emit="compact"`` train
+    path: the FlashSFA backward kernel emits dQ̃/dK̃ as code values aligned to
+    the stored indices, and this seam consumes them directly —
+
+        dx = Σ_h scatter(g_h) @ w_hᵀ        (kernels/code_grad.py, Pallas)
+        dw_h = xᵀ @ scatter(g_h)
+
+    with the scatter living only in VMEM tiles, so the dense (n, d)
+    gradient never round-trips through HBM.
+
+    x: (n, m) projection input; w_heads: (H, m, d) per-head weight blocks;
+    g_vals/g_idx: (H, n, k). Returns (dx (n, m), dw (H, m, d)), both f32.
+    """
+    dx = code_grad_dx(g_vals, g_idx, w_heads, d=d, interpret=interpret)
+    dw = code_grad_dw(x, g_vals, g_idx, d=d, interpret=interpret)
+    return dx, dw
 
 
 def norm_init(dim: int, kind: str = "rmsnorm"):

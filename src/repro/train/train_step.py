@@ -10,7 +10,13 @@ compression with error feedback before the DP mean.
 repro/models/backends.py) for the whole step — ``attn_backend="pallas"``
 trains through the Pallas FlashSFA forward AND backward kernels (fwd+bwd
 speedups measured end-to-end, see benchmarks/bench_pretrain.py), ``"xla"``
-forces the pure-JAX path.
+forces the pure-JAX path. ``bwd_emit`` likewise overrides
+``cfg.attention.bwd_emit``: ``"compact"`` makes the FlashSFA backward write
+(n, k) code-gradients and — on eligible layers — routes the projection
+backward through the compact-code seam (kernels/code_grad.py), cutting the
+attention backward's dQ/dK write traffic from O(n·d) to O(n·k). Weight
+gradients stay dense: the sparsity is consumed at the projection vjp, so
+the AdamW update is unchanged.
 """
 from __future__ import annotations
 
@@ -26,19 +32,27 @@ from repro.models import loss_fn
 from repro.optim import OptimizerConfig, make_optimizer
 
 
-def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str]):
-    if attn_backend is None or cfg.attention is None:
+def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str],
+                           bwd_emit: Optional[str] = None):
+    if cfg.attention is None:
+        return cfg
+    updates = {}
+    if attn_backend is not None:
+        updates["backend"] = attn_backend
+    if bwd_emit is not None:
+        updates["bwd_emit"] = bwd_emit
+    if not updates:
         return cfg
     return dataclasses.replace(
-        cfg, attention=dataclasses.replace(cfg.attention,
-                                           backend=attn_backend))
+        cfg, attention=dataclasses.replace(cfg.attention, **updates))
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                     accum_steps: int = 1,
                     grad_compression: Optional[float] = None,
-                    attn_backend: Optional[str] = None):
-    cfg = _override_attn_backend(cfg, attn_backend)
+                    attn_backend: Optional[str] = None,
+                    bwd_emit: Optional[str] = None):
+    cfg = _override_attn_backend(cfg, attn_backend, bwd_emit)
     update = make_optimizer(opt_cfg)
 
     def compute_grads(params, batch):

@@ -28,6 +28,9 @@ class TrainerConfig:
     # Pallas kernels; "xla" = force the pure-JAX path (registry names,
     # repro/models/backends.py).
     attn_backend: Optional[str] = None
+    # None = use cfg.attention.bwd_emit; "compact" = FlashSFA backward emits
+    # (n, k) code-gradients consumed by the projection seam (DESIGN.md §3).
+    bwd_emit: Optional[str] = None
     ft: FTConfig = dataclasses.field(default_factory=FTConfig)
 
 
@@ -46,7 +49,7 @@ class Trainer:
         self.step_fn = jax.jit(make_train_step(
             cfg, opt_cfg, accum_steps=tcfg.accum_steps,
             grad_compression=tcfg.grad_compression,
-            attn_backend=tcfg.attn_backend))
+            attn_backend=tcfg.attn_backend, bwd_emit=tcfg.bwd_emit))
         self._batch_fn = (markov_batch if tcfg.data_kind == "markov"
                           else copy_batch)
 

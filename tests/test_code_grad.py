@@ -1,0 +1,201 @@
+"""Compact code-gradient train path: code_grad kernels, the fused projection
+seam, and the no-dense-round-trip contract (ISSUE 4 acceptance).
+
+Three layers of pinning:
+  * kernel vs oracle — code_grad_dx / code_grad_dw against the explicit
+    scatter_code_grads + einsum forms;
+  * train-path parity — attention_apply / make_train_step gradients with
+    ``bwd_emit="compact"`` match the dense-emit pallas path AND the XLA
+    straight-through oracle to <= 1e-4 (GQA included);
+  * grep-able regression — the fused backward's source must never scatter
+    a compact gradient back to dense layout (same style as PR 3's
+    ``to_feature_major`` ban on the pallas_fm decode step).
+"""
+import dataclasses
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionConfig, ModelConfig
+from repro.kernels.code_grad import (
+    code_grad_dw, code_grad_dx, scatter_code_grads,
+)
+from repro.models import attention as attn
+from repro.models.layers import sparse_proj_bwd
+
+ATOL = 1e-4
+
+
+def _codes(rng, nh, n, d, k):
+    vals = jax.random.normal(jax.random.fold_in(rng, 1), (nh, n, k))
+    # unique ascending indices per row, like rtopk emits
+    perm = jax.random.permutation(
+        jax.random.fold_in(rng, 2),
+        jnp.broadcast_to(jnp.arange(d), (nh, n, d)), axis=-1,
+        independent=True)
+    idx = jnp.sort(perm[..., :k], axis=-1).astype(jnp.int32)
+    return vals, idx
+
+
+# --------------------------------------------------------------------------
+# kernel vs oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nh,n,m,d,k", [
+    (1, 128, 128, 64, 8),     # aligned tiles
+    (3, 200, 96, 64, 8),      # ragged n and m: padded tiles on both grids
+    (2, 70, 130, 32, 4),
+])
+def test_code_grad_kernels_vs_oracle(rng, nh, n, m, d, k):
+    vals, idx = _codes(rng, nh, n, d, k)
+    w = jax.random.normal(jax.random.fold_in(rng, 3), (nh, m, d))
+    x = jax.random.normal(jax.random.fold_in(rng, 4), (n, m))
+    s = scatter_code_grads(vals, idx, d)                    # (nh, n, d)
+    dx_ref = jnp.einsum("hnd,hmd->nm", s, w)
+    dw_ref = jnp.einsum("nm,hnd->hmd", x, s)
+    np.testing.assert_allclose(np.asarray(code_grad_dx(vals, idx, w, d=d)),
+                               np.asarray(dx_ref), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(code_grad_dw(x, vals, idx, d=d)),
+                               np.asarray(dw_ref), atol=ATOL)
+
+
+def test_sparse_proj_bwd_matches_dense_projection_vjp(rng):
+    """The projection seam == autodiff of y_h = x @ w_h fed the scattered
+    cotangent: same dx, same per-head dW."""
+    nh, n, m, d, k = 2, 96, 48, 32, 4
+    vals, idx = _codes(rng, nh, n, d, k)
+    w = jax.random.normal(jax.random.fold_in(rng, 3), (nh, m, d))
+    x = jax.random.normal(jax.random.fold_in(rng, 4), (n, m))
+    dx, dw = sparse_proj_bwd(x, w, vals, idx, d=d)
+    g = scatter_code_grads(vals, idx, d)                    # dense cotangent
+    dx2, dw2 = jax.vjp(lambda x, w: jnp.einsum("nm,hmd->hnd", x, w), x, w
+                       )[1](g)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx2), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw2), atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# fused train path
+# --------------------------------------------------------------------------
+
+def _cfg(h, hkv, hd=32, k=4, bwd_emit="compact", backend="pallas", **kw):
+    a = AttentionConfig(num_heads=h, num_kv_heads=hkv, head_dim=hd, sfa_k=k,
+                        rope=False, backend=backend, bwd_emit=bwd_emit, **kw)
+    return ModelConfig(name="cg-test", family="dense", num_layers=1,
+                       d_model=48, d_ff=64, vocab_size=64, attention=a)
+
+
+def _attn_grads(rng, cfg, params=None, b=2, n=96):
+    if params is None:
+        params = attn.attention_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 9), (b, n, cfg.d_model))
+
+    def loss(p, x):
+        o = attn.attention_apply(p, x, cfg=cfg, mode="train").out
+        w = jnp.arange(o.size, dtype=o.dtype).reshape(o.shape) / o.size
+        return jnp.sum(o * w + 0.5 * o * o)
+
+    return params, jax.grad(loss, argnums=(0, 1))(params, x)
+
+
+@pytest.mark.parametrize("h,hkv", [(2, 2), (4, 2)])   # MHA and GQA group=2
+def test_compact_train_path_grad_parity(rng, h, hkv):
+    cfg_c = _cfg(h, hkv, bwd_emit="compact")
+    assert attn.compact_train_eligible(cfg_c)
+    params, (gp_c, gx_c) = _attn_grads(rng, cfg_c)
+    for ref_cfg in (_cfg(h, hkv, bwd_emit="dense"),
+                    _cfg(h, hkv, bwd_emit="dense", backend="xla")):
+        _, (gp_r, gx_r) = _attn_grads(rng, ref_cfg, params=params)
+        np.testing.assert_allclose(
+            np.asarray(gx_c), np.asarray(gx_r), atol=ATOL,
+            err_msg=f"dx vs {ref_cfg.attention.backend}")
+        for key in ("w_qkv", "w_o"):
+            np.testing.assert_allclose(
+                np.asarray(gp_c[key]["w"]), np.asarray(gp_r[key]["w"]),
+                atol=ATOL, err_msg=f"d{key} vs {ref_cfg.attention.backend}")
+
+
+def test_compact_seam_is_actually_taken(rng, monkeypatch):
+    """The eligible train config must route through the fused seam (and the
+    ineligible rope config must not) — eligibility is trace-time, so a
+    counter on the seam function observes it directly."""
+    calls = []
+    orig = attn._sfa_proj_attend_compact
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(attn, "_sfa_proj_attend_compact", spy)
+    cfg = _cfg(2, 2)
+    params = attn.attention_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 9), (1, 64, cfg.d_model))
+    attn.attention_apply(params, x, cfg=cfg, mode="train")
+    assert calls, "eligible compact config bypassed the fused seam"
+    calls.clear()
+    cfg_rope = dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, rope=True))
+    assert not attn.compact_train_eligible(cfg_rope)
+    params = attn.attention_init(rng, cfg_rope)
+    attn.attention_apply(params, x, cfg=cfg_rope, mode="train")
+    assert not calls, "rope layer must not take the compact seam"
+
+
+@pytest.mark.slow
+def test_train_step_compact_matches_dense_emit(rng):
+    """One optimizer step end-to-end: params after a compact-emit step ==
+    params after a dense-emit step (the win is bandwidth, not math).
+    Whole-model compile — slow lane, like the arch smokes; the fast lane
+    covers the same seam at the attention_apply level above."""
+    from repro.models import init as model_init
+    from repro.optim import OptimizerConfig, init_opt_state
+    from repro.train.train_step import make_train_step
+
+    cfg = _cfg(2, 2)
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=2)
+    toks = jax.random.randint(jax.random.fold_in(rng, 7), (2, 33), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    outs = {}
+    for emit in ("dense", "compact"):
+        step = make_train_step(cfg, opt, bwd_emit=emit)
+        p2, _, metrics = step(params, init_opt_state(params), batch)
+        outs[emit] = (p2, metrics["loss"])
+    np.testing.assert_allclose(float(outs["dense"][1]),
+                               float(outs["compact"][1]), atol=1e-6)
+    flat_d = jax.tree_util.tree_leaves(outs["dense"][0])
+    flat_c = jax.tree_util.tree_leaves(outs["compact"][0])
+    for a, b in zip(flat_d, flat_c):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# no-dense-round-trip contract
+# --------------------------------------------------------------------------
+
+def test_compact_train_path_never_scatters_dense():
+    """Grep-able regression (PR 3 ``to_feature_major``-ban style): on the
+    ``bwd_emit="compact"`` train path the compact code-gradients must flow
+    straight into the code_grad kernels — neither the XLA scatter oracle nor
+    any densify/one-hot rebuild of a dense dQ/dK may appear in the fused
+    backward or the projection seam. (``scatter_code_grads`` itself lives on
+    as the oracle; ops.py's generic op-level vjp is allowed to use it.)"""
+    for fn in (attn._sfa_proj_attend_bwd, sparse_proj_bwd):
+        src = inspect.getsource(fn)
+        assert "scatter_code_grads" not in src, fn.__name__
+        assert "densify" not in src, fn.__name__
+        assert "one_hot" not in src, fn.__name__
+        assert ".at[" not in src, fn.__name__
+    # the oracle remains available where it belongs
+    from repro.kernels.code_grad import scatter_code_grads  # noqa: F401
+
+
+def test_compact_emit_rejects_unknown_mode(rng):
+    from repro.kernels import sfa_attention_op
+    q = jnp.zeros((1, 8, 1, 16))
+    with pytest.raises(ValueError, match="bwd_emit"):
+        sfa_attention_op(q, q, q, sfa_k=4, impl="pallas", bwd_emit="sparse")

@@ -5,6 +5,9 @@ through ``sfa_attention_op(..., impl="pallas")`` executes the Pallas backward
 (no XLA forward re-execution) and matches the XLA-path gradients to <= 1e-4
 across causal/non-causal, ragged sequence lengths, k in {4, 8, d} and
 multi-head batches — plus a finite-difference spot check on a tiny shape.
+The same bar applies to ``bwd_emit="compact"``: the kernel's (n, k)
+code-gradient emit, scattered back by the oracle, must be the dense emit
+bit-for-bit in structure and <= 1e-4 in value.
 """
 import functools
 
@@ -14,7 +17,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
-    flash_attention, flash_sfa, flash_sfa_bwd,
+    flash_attention, flash_sfa, flash_sfa_bwd, scatter_code_grads,
     sfa_attention_op, dense_attention_op,
 )
 from repro.kernels import ref as REF
@@ -29,10 +32,11 @@ def _qkv(rng, b, n, h, d):
     return q, k, v
 
 
-def _grads(impl, q, k, v, *, sfa_k, causal, bwd_impl="pallas"):
+def _grads(impl, q, k, v, *, sfa_k, causal, bwd_impl="pallas",
+           bwd_emit="dense"):
     def loss(q, k, v):
         o = sfa_attention_op(q, k, v, sfa_k=sfa_k, causal=causal, impl=impl,
-                             bwd_impl=bwd_impl)
+                             bwd_impl=bwd_impl, bwd_emit=bwd_emit)
         # non-uniform cotangent so dO exercises every row differently
         w = jnp.arange(o.size, dtype=o.dtype).reshape(o.shape) / o.size
         return jnp.sum(o * w + 0.5 * o * o)
@@ -52,8 +56,27 @@ def test_sfa_grad_parity_pallas_vs_xla(rng, causal, sfa_k):
     g1 = _grads("pallas", q, k, v, sfa_k=sfa_k, causal=causal)
     g2 = _grads("xla", q, k, v, sfa_k=sfa_k, causal=causal)
     for name, a, b in zip("qkv", g1, g2):
+        # grads must come back in the ORIGINAL input dtype, not whatever
+        # rtopk emits for the code values (ops.py dtype-carrier fix)
+        assert a.dtype == q.dtype, f"d{name} dtype {a.dtype} != {q.dtype}"
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
                                    err_msg=f"d{name} mismatch")
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("sfa_k", [4, 8])
+def test_sfa_grad_parity_compact_emit_vs_xla(rng, causal, sfa_k):
+    """Op-level acceptance for ``bwd_emit="compact"``: the compact-emitting
+    Pallas backward (scattered back to dense by the op's vjp) matches the
+    XLA straight-through oracle to <= 1e-4 — ragged n, both causalities."""
+    q, k, v = _qkv(rng, 2, 160, 2, 32)
+    g1 = _grads("pallas", q, k, v, sfa_k=sfa_k, causal=causal,
+                bwd_emit="compact")
+    g2 = _grads("xla", q, k, v, sfa_k=sfa_k, causal=causal)
+    for name, a, b in zip("qkv", g1, g2):
+        assert a.dtype == q.dtype, f"d{name} dtype {a.dtype} != {q.dtype}"
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
+                                   err_msg=f"d{name} mismatch (compact)")
 
 
 def test_sfa_grad_parity_multihead_batch(rng):
@@ -103,6 +126,10 @@ def test_sfa_grad_finite_difference_tiny(rng):
     f = functools.partial(sfa_attention_op, sfa_k=4, causal=True,
                           impl="pallas")
     check_grads(f, (q, k, v), order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
+    # same spot check through the compact-emitting backward
+    fc = functools.partial(sfa_attention_op, sfa_k=4, causal=True,
+                           impl="pallas", bwd_emit="compact")
+    check_grads(fc, (q, k, v), order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
 
 
 def test_dense_grad_parity_pallas_vs_xla(rng):
@@ -187,3 +214,32 @@ def test_flash_sfa_bwd_block_shapes(rng, bq, bk):
     np.testing.assert_allclose(np.asarray(dq), np.asarray(dq2) * mq, atol=ATOL)
     np.testing.assert_allclose(np.asarray(dk), np.asarray(dk2) * mk_, atol=ATOL)
     np.testing.assert_allclose(np.asarray(dv), np.asarray(dv2), atol=ATOL)
+
+
+@pytest.mark.parametrize("d,k", [(32, 4), (64, 8)])
+def test_flash_sfa_bwd_compact_emit_matches_dense_emit(rng, d, k):
+    """Kernel-level contract of ``emit="compact"``: the (n, k) code-gradients
+    are the dense emit gathered at the stored indices — scattering them back
+    (scatter_code_grads, the exact inverse) reproduces the dense emit, and
+    dV is untouched by the emit mode. Ragged n exercises padded tiles."""
+    bh, n = 2, 176
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (bh, n, d))
+    kk = jax.random.normal(jax.random.fold_in(rng, 2), (bh, n, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (bh, n, d))
+    g = jax.random.normal(jax.random.fold_in(rng, 4), (bh, n, d))
+    qv, qi = REF.rtopk_ref(q, k)
+    kv_, ki = REF.rtopk_ref(kk, k)
+    o, lse = flash_sfa(qv, qi, kv_, ki, v, d=d, return_residuals=True)
+    dq, dk, dv = flash_sfa_bwd(qv, qi, kv_, ki, v, o, lse, g, d=d)
+    dqc, dkc, dvc = flash_sfa_bwd(qv, qi, kv_, ki, v, o, lse, g, d=d,
+                                  emit="compact")
+    assert dqc.shape == (bh, n, k) and dkc.shape == (bh, n, k)
+    np.testing.assert_allclose(np.asarray(scatter_code_grads(dqc, qi, d)),
+                               np.asarray(dq), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(scatter_code_grads(dkc, ki, d)),
+                               np.asarray(dk), atol=ATOL)
+    np.testing.assert_array_equal(np.asarray(dvc), np.asarray(dv))
+    # and values are exactly the dense rows gathered at the stored coords
+    np.testing.assert_allclose(
+        np.asarray(jnp.take_along_axis(dq, qi, axis=-1)), np.asarray(dqc),
+        atol=1e-6)
