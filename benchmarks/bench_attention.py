@@ -14,7 +14,10 @@ driver (their own Table 7 shows the GPU kernel is bandwidth-bound too). The
 backward byte model is in DESIGN.md §3: the bwd reads the same O(nk) codes
 plus dO/O/lse, and writes either dense dQ/dK (``emit="dense"``) or the
 compact (n, k) code-gradients (``emit="compact"`` — 8× fewer dQ+dK write
-bytes at d=64, k=8). The bwd rows time both emits (``compact_us`` vs the
+bytes at d=64, k=8) or the RoPE pair-closure (n, 2k) code-gradients
+(``emit="compact2"`` — the layout the rope'd train seam consumes through
+``rope_code_vjp``; still d/2k = 4× fewer dQ+dK write bytes at d=64, k=8).
+The bwd rows time all three emits (``compact_us``/``compact2_us`` vs the
 dense-attention ``dense_us``) and ASSERT the realized kernel output bytes
 match the analytic write model, kvreal-style.
 
@@ -61,9 +64,12 @@ def dense_bytes(n: int, d: int, dv: int) -> float:
 def sfa_bwd_write_bytes(n: int, d: int, k: int, dv: int,
                         emit: str = "dense") -> float:
     """Per-(bh) bwd HBM write bytes: dQ+dK in the chosen emit layout + dense
-    dV. Compact emit writes the (n, k) code-gradients only."""
+    dV. Compact emit writes the (n, k) code-gradients only; compact2 the
+    (n, 2k) RoPE pair-closure codes (DESIGN.md §3) — still d/2k below dense."""
     if emit == "compact":
         return 2 * n * k * 2 + n * dv * 2
+    if emit == "compact2":
+        return 2 * n * 2 * k * 2 + n * dv * 2
     return 2 * n * d * 2 + n * dv * 2
 
 
@@ -107,10 +113,12 @@ def _xla_gather_decode(q, kv, ki, v, lengths, scale):
 
 
 def run(quick: bool = True, smoke: bool = False):
-    # closed-form pin of the ISSUE-4 write model (once, not per shape): the
+    # closed-form pin of the ISSUE-4/5 write model (once, not per shape): the
     # per-shape loop asserts REALIZED kernel output bytes == this function
     assert sfa_bwd_write_bytes(512, 64, 8, 64, "compact") == \
         2 * 512 * 8 * 2 + 512 * 64 * 2
+    assert sfa_bwd_write_bytes(512, 64, 8, 64, "compact2") == \
+        2 * 512 * 16 * 2 + 512 * 64 * 2
     assert sfa_bwd_write_bytes(512, 64, 8, 64, "dense") == \
         2 * 512 * 64 * 2 + 512 * 64 * 2
     rows = []
@@ -153,6 +161,12 @@ def run(quick: bool = True, smoke: bool = False):
                 lambda *a: flash_sfa_bwd(*a, d=d, block_q=128, block_k=128,
                                          emit="compact"),
                 qv, qi, kv_, ki, v, o_sfa, lse_sfa, g)
+            # pair-widened (n, 2k) emit: the layout the RoPE'd train seam
+            # consumes through rope_code_vjp (DESIGN.md §3)
+            t_compact2_b = _time(
+                lambda *a: flash_sfa_bwd(*a, d=d, block_q=128, block_k=128,
+                                         emit="compact2"),
+                qv, qi, kv_, ki, v, o_sfa, lse_sfa, g)
             o_d, lse_d = flash_attention(q, kk, v, return_residuals=True)
             t_dense_b = _time(
                 lambda *a: flash_attention_bwd(*a, block_q=128, block_k=128),
@@ -165,6 +179,8 @@ def run(quick: bool = True, smoke: bool = False):
                                         g, d=d)),
                 ("compact", flash_sfa_bwd(qv, qi, kv_, ki, v, o_sfa, lse_sfa,
                                           g, d=d, emit="compact")),
+                ("compact2", flash_sfa_bwd(qv, qi, kv_, ki, v, o_sfa,
+                                           lse_sfa, g, d=d, emit="compact2")),
             ):
                 realized = sum(x.size for x in outs) // bh * 2
                 analytic = sfa_bwd_write_bytes(n, d, k, d, emit)
@@ -172,6 +188,8 @@ def run(quick: bool = True, smoke: bool = False):
             bw_br = dense_bwd_bytes(n, d, d) / sfa_bwd_bytes(n, d, k, d)
             bw_br_c = dense_bwd_bytes(n, d, d) / sfa_bwd_bytes(n, d, k, d,
                                                                "compact")
+            bw_br_c2 = dense_bwd_bytes(n, d, d) / sfa_bwd_bytes(n, d, k, d,
+                                                                "compact2")
             bwd_flops = 2.5 * attn_flops(n, d, d)         # FA2: ~2.5× fwd
             tpu_dense_b = max(bwd_flops / PEAK_FLOPS,
                               dense_bwd_bytes(n, d, d) / HBM_BW) * 1e6
@@ -180,17 +198,26 @@ def run(quick: bool = True, smoke: bool = False):
             tpu_sfa_bc = max(bwd_flops / PEAK_FLOPS,
                              sfa_bwd_bytes(n, d, k, d, "compact") / HBM_BW
                              ) * 1e6
+            tpu_sfa_bc2 = max(bwd_flops / PEAK_FLOPS,
+                              sfa_bwd_bytes(n, d, k, d, "compact2") / HBM_BW
+                              ) * 1e6
             rows.append((f"attn_bwd_n{n}_d{d}_k{k}", t_sfa_b,
                          f"dense_us={t_dense_b:.0f};"
                          f"compact_us={t_compact_b:.0f};"
+                         f"compact2_us={t_compact2_b:.0f};"
                          f"byte_ratio={bw_br:.2f};"
                          f"byte_ratio_compact={bw_br_c:.2f};"
+                         f"byte_ratio_compact2={bw_br_c2:.2f};"
                          f"write_B_dense={sfa_bwd_write_bytes(n, d, k, d):.0f};"
                          f"write_B_compact="
                          f"{sfa_bwd_write_bytes(n, d, k, d, 'compact'):.0f};"
+                         f"write_B_compact2="
+                         f"{sfa_bwd_write_bytes(n, d, k, d, 'compact2'):.0f};"
                          f"tpu_model_speedup={tpu_dense_b / tpu_sfa_b:.2f};"
                          f"tpu_model_speedup_compact="
-                         f"{tpu_dense_b / tpu_sfa_bc:.2f}"))
+                         f"{tpu_dense_b / tpu_sfa_bc:.2f};"
+                         f"tpu_model_speedup_compact2="
+                         f"{tpu_dense_b / tpu_sfa_bc2:.2f}"))
     # serving decode backends (registry names): token-major flash_sfa_decode
     # vs feature-major flash_sfa_decode_fm vs the XLA gather oracle, one
     # query against an n-token sparse cache. CPU interpret-mode wall-clock

@@ -1,0 +1,187 @@
+"""CI perf-trajectory gate: fail the PR when the analytic byte-model
+trajectory regresses against the last committed ``BENCH_attention.json``
+snapshot.
+
+    PYTHONPATH=src python benchmarks/check_trajectory.py [--tol 0.02]
+
+Runs the attention suite in ``--smoke`` mode (tiny shapes, same kernel
+signatures — the realized==analytic write-byte asserts fire inside the run;
+the rows are echoed as CSV, so this step doubles as the CI bench smoke) and
+compares the *analytic* derived fields of each row against the last entry
+of the committed trajectory file:
+
+  * ``byte_ratio*`` — higher is better; a drop beyond ``--tol`` (relative)
+    fails.
+  * ``write_B*`` — normalized per token (the raw value is linear in n);
+    lower is better; growth beyond ``--tol`` fails.
+  * schema — for every (kind, d, k) key the smoke sweep covers, every gated
+    field the snapshot row carries must still exist (fields may be *added*
+    freely; a field disappearing means a kernel signature or byte-model row
+    was dropped), and every row *kind* (attn / attn_bwd / decode) present
+    in the snapshot must still appear. Snapshot keys outside the smoke
+    sweep are listed as uncovered — visible, not failing (the quick/full
+    sweeps cover them when the snapshot is regenerated).
+
+Rows are keyed by ``(kind, d, k)`` and NOT by n: the gated quantities are
+exactly n-invariant (every byte term is linear in n; ratios cancel it,
+write bytes normalize by it), which is what lets the cheap smoke sweep
+(n=128) gate against the committed quick-mode trajectory (n=256/512).
+Measured ``*_us`` wall-clock fields are never gated (CPU interpret-mode
+timing is trend-only noise), and neither are ``tpu_model_speedup*`` fields:
+the roofline max(flops, bytes) crosses over with n, so they are NOT
+n-invariant and a (kind, d, k) key cannot gate them honestly.
+
+An *intentional* byte-model change (e.g. a cheaper emit) that moves a ratio
+down must regenerate the snapshot in the same PR
+(``PYTHONPATH=src python -m benchmarks.run --only attention``), which is
+exactly the trajectory discipline the gate enforces.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+
+ROW_RE = re.compile(
+    r"^(?P<kind>attn_bwd|attn|decode)_n(?P<n>\d+)_d(?P<d>\d+)_k(?P<k>\d+)$")
+
+# gated field prefixes: (prefix, direction, normalize_by_n). Only
+# n-invariant quantities belong here — tpu_model_speedup* is excluded
+# because the roofline max(flops, bytes) crosses over with n.
+GATES = (
+    ("byte_ratio", "higher", False),
+    ("write_B", "lower", True),
+)
+
+
+def parse_derived(derived: str) -> dict:
+    """'a=1.5;b=xyz' -> {'a': 1.5, 'b': 'xyz'} (floats where they parse)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        try:
+            out[key] = float(val)
+        except ValueError:
+            out[key] = val
+    return out
+
+
+def gated_fields(name: str, derived: str):
+    """Row -> ((kind, d, k), {field: (direction, normalized value)}).
+
+    Returns (None, {}) for rows outside the gate's name grammar."""
+    m = ROW_RE.match(name)
+    if m is None:
+        return None, {}
+    n = int(m.group("n"))
+    key = (m.group("kind"), int(m.group("d")), int(m.group("k")))
+    fields = {}
+    for f, v in parse_derived(derived).items():
+        if not isinstance(v, float):
+            continue
+        for prefix, direction, per_token in GATES:
+            if f.startswith(prefix):
+                fields[f] = (direction, v / n if per_token else v)
+                break
+    return key, fields
+
+
+def index_rows(rows) -> dict:
+    """rows of {'name', 'derived'} -> {(kind, d, k): {field: (dir, val)}}.
+
+    Later rows win on key collisions — harmless, because every gated field
+    is n-invariant by construction (see GATES), so rows at different n
+    carry identical gated values for the same key."""
+    out = {}
+    for r in rows:
+        key, fields = gated_fields(r["name"], r["derived"])
+        if key is not None and fields:
+            out[key] = fields
+    return out
+
+
+def compare(baseline_rows, new_rows, *, tol: float) -> list[str]:
+    """Return a list of human-readable regression messages (empty = pass)."""
+    base = index_rows(baseline_rows)
+    new = index_rows(new_rows)
+    problems = []
+    base_kinds = {k[0] for k in base}
+    new_kinds = {k[0] for k in new}
+    for kind in sorted(base_kinds - new_kinds):
+        problems.append(
+            f"row kind {kind!r} present in the snapshot is missing from the "
+            f"smoke run — a kernel-signature row was dropped")
+    for key in sorted(new.keys() & base.keys()):
+        for field, (direction, old_v) in sorted(base[key].items()):
+            if field not in new[key]:
+                problems.append(
+                    f"{key}: field {field!r} disappeared (snapshot has "
+                    f"{old_v:.4g}) — byte-model schema regression")
+                continue
+            new_v = new[key][field][1]
+            if direction == "higher" and new_v < old_v * (1 - tol):
+                problems.append(
+                    f"{key}: {field} regressed {old_v:.4g} -> {new_v:.4g} "
+                    f"(>{tol:.0%} drop)")
+            elif direction == "lower" and new_v > old_v * (1 + tol):
+                problems.append(
+                    f"{key}: {field} regressed {old_v:.4g} -> {new_v:.4g} "
+                    f"per token (>{tol:.0%} growth)")
+    return problems
+
+
+def load_baseline(path: pathlib.Path, entry: int) -> list:
+    history = json.loads(path.read_text())
+    if not history:
+        raise SystemExit(f"{path} holds no snapshots — seed the trajectory "
+                         f"with `python -m benchmarks.run --only attention`")
+    return history[entry]["rows"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=pathlib.Path,
+                    default=pathlib.Path(__file__).resolve().parent.parent
+                    / "BENCH_attention.json")
+    ap.add_argument("--entry", type=int, default=-1,
+                    help="which snapshot to gate against (default: last)")
+    ap.add_argument("--tol", type=float, default=0.02,
+                    help="relative tolerance before a drift fails the gate")
+    args = ap.parse_args()
+
+    baseline = load_baseline(args.baseline, args.entry)
+    try:
+        from benchmarks import bench_attention
+    except ImportError:
+        import bench_attention
+    raw = bench_attention.run(quick=True, smoke=True)
+    # echo the smoke rows: this step doubles as the CI bench smoke (the
+    # realized==analytic asserts already fired inside run())
+    print("name,us_per_call,derived")
+    for r in raw:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+    rows = [{"name": r[0], "derived": r[2]} for r in raw]
+    problems = compare(baseline, rows, tol=args.tol)
+    gated = index_rows(rows)
+    uncovered = sorted(index_rows(baseline).keys() - gated.keys())
+    print(f"trajectory gate: {len(gated)} smoke row keys vs snapshot "
+          f"{args.baseline.name}[{args.entry}] (tol {args.tol:.0%})")
+    if uncovered:
+        print(f"note: {len(uncovered)} snapshot keys outside the smoke "
+              f"sweep (ungated here; regenerating the snapshot covers "
+              f"them): {uncovered}")
+    if problems:
+        for p in problems:
+            print(f"FAIL: {p}")
+        print("(intentional byte-model changes must regenerate the snapshot "
+              "in the same PR: PYTHONPATH=src python -m benchmarks.run "
+              "--only attention)")
+        raise SystemExit(1)
+    print("OK: no byte-model regression")
+
+
+if __name__ == "__main__":
+    main()

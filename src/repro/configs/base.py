@@ -47,12 +47,16 @@ class AttentionConfig:
     # FlashSFA backward emit layout (DESIGN.md §3): "dense" writes dQ/dK as
     # (n, d) rows; "compact" writes (n, k) value-gradients aligned to the
     # stored indices — O(n·k) backward write traffic. On an eligible train
-    # layer (pallas backend, no rope/qk-norm/window/rope-protect/distill)
-    # the fused projection seam in models/attention.py consumes the codes
-    # directly via kernels/code_grad.py, so no dense dQ/dK ever round-trips
-    # through HBM; elsewhere "compact" is honored at the op level (kernel
-    # writes compact, scattered back for the generic vjp contract).
-    bwd_emit: str = "dense"          # "dense" | "compact"
+    # layer (pallas backend, no qk-norm/window/rope-protect/MLA/distill —
+    # RoPE is fine) the fused projection seam in models/attention.py
+    # consumes the codes directly via kernels/code_grad.py, so no dense
+    # dQ/dK ever round-trips through HBM; rope'd seam layers automatically
+    # widen to the (n, 2k) pair-closure emit ("compact2") and inverse-rotate
+    # the codes through rope_code_vjp. Elsewhere "compact"/"compact2" are
+    # honored at the op level (kernel writes compact, scattered back for
+    # the generic vjp contract). "compact2" may also be requested directly,
+    # mainly as a parity/bench surface for the pair-widened kernel emit.
+    bwd_emit: str = "dense"          # "dense" | "compact" | "compact2"
     # SFA-on-RoPE handling (paper A.1): keep a few leading dims dense so
     # position info survives sparsification; 0 = sparsify everything.
     sfa_rope_protect: int = 0

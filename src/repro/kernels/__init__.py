@@ -2,8 +2,9 @@
 
 rtopk            — exact RTopK-TPU row top-k (bit-pattern bisection)
 flash_sfa        — IO-sparse compute-dense tiled SFA attention (prefill)
-flash_sfa_bwd    — FlashSFA backward (recompute-in-tile, Eq. 6 ST grads,
-                   dense or compact (n, k) emit)
+flash_sfa_bwd    — FlashSFA backward (recompute-in-tile, Eq. 6 ST grads;
+                   dense, compact (n, k) or pair-widened compact2 (n, 2k)
+                   emit — pair_closure_indices is the index-side companion)
 flash_attention_bwd — dense FlashAttention backward (same skeleton)
 code_grad        — compact code-gradient consumers: scatter_code_grads XLA
                    oracle + sparse-grad × dense matmul kernels (dx/dW)
@@ -19,7 +20,9 @@ from repro.kernels.code_grad import (
     code_grad_dw, code_grad_dx, scatter_code_grads,
 )
 from repro.kernels.flash_sfa import flash_sfa
-from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, flash_attention_bwd
+from repro.kernels.flash_sfa_bwd import (
+    flash_attention_bwd, flash_sfa_bwd, pair_closure_indices,
+)
 from repro.kernels.flash_sfa_decode import (
     feature_major_prefill, flash_sfa_decode, flash_sfa_decode_fm,
 )
@@ -27,6 +30,7 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import sfa_attention_op, dense_attention_op
 
 __all__ = ["rtopk", "flash_sfa", "flash_sfa_bwd", "flash_attention_bwd",
+           "pair_closure_indices",
            "code_grad_dw", "code_grad_dx", "scatter_code_grads",
            "flash_sfa_decode", "flash_sfa_decode_fm", "feature_major_prefill",
            "flash_attention", "sfa_attention_op", "dense_attention_op"]

@@ -14,6 +14,15 @@ the same densify-and-MXU trade the forward makes) and feeds the MXU; the
 dense gradient tile lives and dies in VMEM, so a dense dQ/dK never
 round-trips through HBM anywhere on the ``bwd_emit="compact"`` train path.
 
+Both kernels are generic over the *static code width*: the last axis of
+``vals``/``idx`` may be the forward's k (``emit="compact"``) or the RoPE
+pair-closure's 2k (``emit="compact2"`` widened through ``rope_code_vjp``) —
+the width is read from the operand shapes and only sizes the VPU densify
+loop. Duplicate indices within a row (pair closures where both members of a
+RoPE pair were stored, or unwidened partial-rotation entries) *sum*, in the
+VMEM densify and in the XLA oracle alike — exactly the scatter-add
+semantics the closure layout relies on.
+
 Both kernels carry a leading per-head axis H (attention projections are
 head-blocked: W = [W_1 | ... | W_H] with per-head codes over d = head_dim)
 as a *sequential* grid axis with a VMEM accumulator, so the head sum in dx
@@ -39,9 +48,11 @@ from repro.kernels.flash_sfa import _densify_block
 def scatter_code_grads(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:
     """XLA oracle: scatter (..., k) value-grads to their dense (..., d) form.
 
-    One-hot contraction (TPU-friendly, no lax.scatter). Rows of ``idx`` are
-    unique per code by construction (rtopk/sparsify emit ascending indices),
-    so no collision handling is needed; duplicate indices would sum.
+    One-hot contraction (TPU-friendly, no lax.scatter). Duplicate indices
+    within a row SUM — a guarantee, not an accident: rtopk/sparsify codes
+    are duplicate-free, but ``pair_closure_indices`` closures repeat an
+    index when both pair members are stored (each occurrence carrying its
+    own share) and the summing contraction is what makes that exact.
     """
     onehot = jax.nn.one_hot(idx, d, dtype=vals.dtype)       # (..., k, d)
     return jnp.einsum("...k,...kd->...d", vals, onehot)
@@ -71,8 +82,9 @@ def code_grad_dx(vals, idx, w, *, d: int, block_n: int = 128,
                  block_m: int = 128, interpret: bool = True):
     """dx = Σ_h scatter(vals_h, idx_h) @ w_hᵀ without densifying in HBM.
 
-    vals/idx: (H, n, k) compact code-grads; w: (H, m, d) per-head weight
-    blocks (m = d_model). Returns (n, m) f32. The head axis is a sequential
+    vals/idx: (H, n, w) compact code-grads at any static code width w (k,
+    or 2k for pair-closure codes); w: (H, m, d) per-head weight blocks
+    (m = d_model). Returns (n, m) f32. The head axis is a sequential
     grid axis accumulated in VMEM — per (n, m) tile the HBM reads are the
     O(nk) codes plus the weight tiles; the densified (block_n, d) gradient
     tile exists only in VMEM.
@@ -130,7 +142,8 @@ def code_grad_dw(x, vals, idx, *, d: int, block_n: int = 128,
     """dW_h = xᵀ @ scatter(vals_h, idx_h) without densifying in HBM.
 
     x: (n, m) projection input (m = d_model, tokens flattened over batch);
-    vals/idx: (H, n, k) compact code-grads. Returns (H, m, d) f32 per-head
+    vals/idx: (H, n, w) compact code-grads at any static code width w (k or
+    the pair-closure 2k). Returns (H, m, d) f32 per-head
     weight-gradient blocks. The token axis is the sequential grid axis with
     a (block_m, d) VMEM accumulator; like ``code_grad_dx`` the densified
     gradient tile never touches HBM.

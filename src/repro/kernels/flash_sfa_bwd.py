@@ -15,15 +15,30 @@ in VMEM scratch across the sequential grid axis. Straight-through (paper
 Eq. 6) gradients land exactly on the k stored coordinates of each row's code,
 scatter-free, in one of two emit layouts (``emit=``):
 
-  * ``"dense"``   — the accumulator is masked to the rebuilt support and
-                    written as (block, d) rows: dQ/dK come out dense (n, d).
-  * ``"compact"`` — the accumulator is *gathered* down to (block, k) on the
-                    stored indices before the single HBM write: dQ̃/dK̃ come
-                    out as (n, k) value-gradients aligned to the (n, k) int32
-                    index tensors the forward already stores. Backward write
-                    traffic for dQ+dK drops from 2·n·d·2 to 2·n·k·2 bytes
-                    (8× at d=64, k=8 — DESIGN.md §3); kernels/code_grad.py
-                    consumes the codes downstream without ever re-scattering.
+  * ``"dense"``    — the accumulator is masked to the rebuilt support and
+                     written as (block, d) rows: dQ/dK come out dense (n, d).
+  * ``"compact"``  — the accumulator is *gathered* down to (block, k) on the
+                     stored indices before the single HBM write: dQ̃/dK̃ come
+                     out as (n, k) value-gradients aligned to the (n, k) int32
+                     index tensors the forward already stores. Backward write
+                     traffic for dQ+dK drops from 2·n·d·2 to 2·n·k·2 bytes
+                     (8× at d=64, k=8 — DESIGN.md §3); kernels/code_grad.py
+                     consumes the codes downstream without ever re-scattering.
+  * ``"compact2"`` — the RoPE pair-widened form (DESIGN.md §3): the gathered
+                     (block, k) values are laid out on the *pair closure* of
+                     the stored indices — for each stored index i the closure
+                     holds both members of i's RoPE rotation pair
+                     (2⌊i/2⌋, 2⌊i/2⌋+1) — as two concatenated k-wide halves
+                     (even members first, odd members second; see
+                     ``pair_closure_indices``). A k-sparse post-rope cotangent
+                     is exactly 2k-sparse pre-rope *on these known indices*,
+                     so the rope vjp (``models/layers.py::rope_code_vjp``)
+                     rotates the (n, 2k) codes in place and the projection
+                     seam still never sees a dense dQ/dK. Write traffic is
+                     2·n·2k·2 for dQ+dK — still d/2k ≈ 4× below dense at
+                     d=64, k=8. ``rot_dim < d`` (partial rotation) keeps
+                     unrotated trailing dims unwidened: their closure entry
+                     is (i, i) with the whole value in the first half.
 
 Two kernels, as in the standard TPU flash backward: a dQ kernel whose grid
 parallelizes over q blocks and scans kv blocks, and a dK/dV kernel whose grid
@@ -76,6 +91,45 @@ def _gather_support(acc: jax.Array, idx: jax.Array) -> jax.Array:
     return jnp.concatenate(cols, axis=1)
 
 
+def pair_closure_indices(idx: jax.Array, rot_dim: int) -> jax.Array:
+    """(…, k) stored indices -> (…, 2k) RoPE pair-closure indices.
+
+    Layout matches ``emit="compact2"``: two concatenated k-wide halves —
+    ``out[…, t]`` is the even member 2⌊i_t/2⌋ of stored index i_t's rotation
+    pair, ``out[…, k+t]`` the odd member 2⌊i_t/2⌋+1. Indices at or beyond
+    ``rot_dim`` (partial rotation: MLA rope heads, rot_dim < head_dim models)
+    have no pair partner and pass through *unwidened*: both their closure
+    slots are i_t itself, with the second half's value pinned to zero by the
+    emit, so the duplicate contributes nothing when scattered.
+
+    The closure is NOT deduped: when both members of a pair are stored, the
+    pair appears twice, each occurrence carrying only its own index's
+    cotangent share — every consumer (the XLA oracle and the code_grad
+    VMEM rebuild alike) *sums* duplicate indices, so the semantics are
+    exact and every shape stays static."""
+    rotated = idx < rot_dim
+    even = jnp.where(rotated, (idx // 2) * 2, idx)
+    odd = jnp.where(rotated, even + 1, idx)
+    return jnp.concatenate([even, odd], axis=-1)
+
+
+def _pair_closure_gather(acc: jax.Array, idx: jax.Array,
+                         rot_dim: int) -> jax.Array:
+    """(b, d) dense accumulator -> (b, 2k) pair-closure code values.
+
+    The straight-through gradient lives only on the k *stored* coordinates,
+    so each closure slot carries the stored value iff the stored index IS
+    that slot's pair member: the even half takes rows whose stored index is
+    even (or unrotated), the odd half rows whose stored index is odd. The
+    partner slots are zero here — they only become nonzero once the rope
+    vjp mixes each pair (models/layers.py::rope_code_vjp)."""
+    g = _gather_support(acc, idx)                         # (b, k) f32
+    rotated = idx < rot_dim
+    is_odd = rotated & (idx % 2 == 1)
+    odd_f = is_odd.astype(jnp.float32)
+    return jnp.concatenate([g * (1.0 - odd_f), g * odd_f], axis=1)
+
+
 def _tile_p_ds(qd, kd, do, vb, lse, delta, *, scale, rows, cols, nk_real,
                causal):
     """Shared backward tile math: normalized P and dS for one (bq, bk) tile."""
@@ -93,13 +147,14 @@ def _tile_p_ds(qd, kd, do, vb, lse, delta, *, scale, rows, cols, nk_real,
     return p, ds
 
 
-def _unpack(refs, d, sparse, emit):
+def _unpack(refs, d, sparse, emit, rot_dim):
     """Split kernel refs into (load_q, load_k, q_emit_fn, k_emit_fn, rest).
 
     sparse: refs = (qv, qi, kv, ki, *rest) — densify in VMEM (lazily, only
     for live tiles); the emit fns turn the dense (block, d) accumulator into
-    the written form — support-masked dense rows (``emit="dense"``) or the
-    (block, k) gathered code values (``emit="compact"``).
+    the written form — support-masked dense rows (``emit="dense"``), the
+    (block, k) gathered code values (``emit="compact"``), or the (block, 2k)
+    pair-closure values (``emit="compact2"``, rot_dim-aware).
     dense: refs = (q, k, *rest) — identity load, identity emit.
     """
     if sparse:
@@ -109,6 +164,9 @@ def _unpack(refs, d, sparse, emit):
         if emit == "compact":
             q_emit = lambda x: _gather_support(x, qi_ref[0])
             k_emit = lambda x: _gather_support(x, ki_ref[0])
+        elif emit == "compact2":
+            q_emit = lambda x: _pair_closure_gather(x, qi_ref[0], rot_dim)
+            k_emit = lambda x: _pair_closure_gather(x, ki_ref[0], rot_dim)
         else:
             q_emit = lambda x: x * _support_mask(qi_ref[0], d)
             k_emit = lambda x: x * _support_mask(ki_ref[0], d)
@@ -121,10 +179,11 @@ def _unpack(refs, d, sparse, emit):
 
 
 def _bwd_dq_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
-                   block_k: int, nk_real: int, sparse: bool, emit: str):
+                   block_k: int, nk_real: int, sparse: bool, emit: str,
+                   rot_dim: int):
     qb, kb = pl.program_id(1), pl.program_id(2)
     nkb = pl.num_programs(2)
-    load_q, load_k, q_emit, _, rest = _unpack(refs, d, sparse, emit)
+    load_q, load_k, q_emit, _, rest = _unpack(refs, d, sparse, emit, rot_dim)
     v_ref, do_ref, lse_ref, delta_ref, dq_ref, dq_acc = rest
 
     @pl.when(kb == 0)
@@ -158,10 +217,11 @@ def _bwd_dq_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
 
 
 def _bwd_dkv_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
-                    block_k: int, nk_real: int, sparse: bool, emit: str):
+                    block_k: int, nk_real: int, sparse: bool, emit: str,
+                    rot_dim: int):
     kb, qb = pl.program_id(1), pl.program_id(2)
     nqb = pl.num_programs(2)
-    load_q, load_k, _, k_emit, rest = _unpack(refs, d, sparse, emit)
+    load_q, load_k, _, k_emit, rest = _unpack(refs, d, sparse, emit, rot_dim)
     v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc = rest
 
     @pl.when(qb == 0)
@@ -198,7 +258,7 @@ def _bwd_dkv_kernel(*refs, d: int, scale: float, causal: bool, block_q: int,
 
 
 def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
-              block_k, interpret, sparse, emit="dense"):
+              block_k, interpret, sparse, emit="dense", rot_dim=None):
     """Shared scaffolding for both backwards.
 
     q_ops/k_ops: (vals, idx) code pairs when sparse, (dense,) when not —
@@ -234,13 +294,16 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
                  pl.BlockSpec((1, block_q), lambda *a: qmap(*a)[:2])])  # delta
 
     kw = dict(d=d, scale=scale, causal=causal, block_q=block_q,
-              block_k=block_k, nk_real=nk, sparse=sparse, emit=emit)
+              block_k=block_k, nk_real=nk, sparse=sparse, emit=emit,
+              rot_dim=d if rot_dim is None else rot_dim)
     cparams = CompilerParams(
         dimension_semantics=("parallel", "parallel", "arbitrary"))
     operands = (*q_ops, *k_ops, v, g, lse, delta)
-    # compact emit shrinks the dQ/dK output rows from d to the code width
-    dq_w = q_ops[0].shape[-1] if emit == "compact" else d
-    dk_w = k_ops[0].shape[-1] if emit == "compact" else d
+    # compact emits shrink the dQ/dK output rows from d to the code width
+    # (k for "compact", 2k for the pair-closure "compact2")
+    code_w = {"compact": 1, "compact2": 2}.get(emit)
+    dq_w = code_w * q_ops[0].shape[-1] if code_w else d
+    dk_w = code_w * k_ops[0].shape[-1] if code_w else d
 
     dq = pl.pallas_call(
         functools.partial(_bwd_dq_kernel, **kw),
@@ -274,11 +337,13 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "d", "causal", "scale", "block_q", "block_k", "interpret", "emit"))
+    "d", "causal", "scale", "block_q", "block_k", "interpret", "emit",
+    "rot_dim"))
 def flash_sfa_bwd(q_vals, q_idx, k_vals, k_idx, v, o, lse, g, *, d: int,
                   causal: bool = True, scale: float | None = None,
                   block_q: int = 128, block_k: int = 128,
-                  interpret: bool = True, emit: str = "dense"):
+                  interpret: bool = True, emit: str = "dense",
+                  rot_dim: int | None = None):
     """FlashSFA backward. Codes: (bh, n, k); v/o/g: (bh, n, dv); lse: (bh, n).
 
     Returns (dq, dk, dv), all supported only on each row's k stored
@@ -286,18 +351,28 @@ def flash_sfa_bwd(q_vals, q_idx, k_vals, k_idx, v, o, lse, g, *, d: int,
     pre-Topk dense Q/K); dv is dense (bh, n, dv). The dQ/dK layout follows
     ``emit``:
 
-      * ``"dense"``   — (bh, n, d) rows, zeros off-support (the oracle form).
-      * ``"compact"`` — (bh, n, k) value-gradients aligned index-for-index
-                        with ``q_idx``/``k_idx``; O(n·k) HBM write traffic.
-                        ``kernels.code_grad.scatter_code_grads`` is the
-                        exact inverse back to the dense form.
+      * ``"dense"``    — (bh, n, d) rows, zeros off-support (the oracle form).
+      * ``"compact"``  — (bh, n, k) value-gradients aligned index-for-index
+                         with ``q_idx``/``k_idx``; O(n·k) HBM write traffic.
+                         ``kernels.code_grad.scatter_code_grads`` is the
+                         exact inverse back to the dense form.
+      * ``"compact2"`` — (bh, n, 2k) value-gradients on the RoPE pair
+                         closure ``pair_closure_indices(idx, rot_dim)``
+                         (concatenated even/odd halves). Same scatter
+                         inverse, with the closure indices; the layout
+                         exists so ``rope_code_vjp`` can rotate the
+                         cotangent to its pre-rope form without leaving the
+                         compact domain. ``rot_dim`` (default d: fully
+                         rotated) bounds the pairing — stored indices at or
+                         beyond it emit unwidened (second slot zero).
     """
-    if emit not in ("dense", "compact"):
-        raise ValueError(f"emit={emit!r}; expected 'dense' or 'compact'")
+    if emit not in ("dense", "compact", "compact2"):
+        raise ValueError(
+            f"emit={emit!r}; expected 'dense', 'compact' or 'compact2'")
     return _bwd_impl([q_vals, q_idx], [k_vals, k_idx], v, o, lse, g, d=d,
                      causal=causal, scale=scale, block_q=block_q,
                      block_k=block_k, interpret=interpret, sparse=True,
-                     emit=emit)
+                     emit=emit, rot_dim=rot_dim)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -24,13 +24,16 @@ the forward via ``jax.vjp`` — kept as the gradient oracle for parity tests
 and as a fallback on backends without a Pallas lowering).
 
 ``bwd_emit`` selects the Pallas backward's dQ/dK emit layout (DESIGN.md §3):
-``"dense"`` (n, d) rows, or ``"compact"`` (n, k) value-gradients which the
-kernel writes in O(n·k) bytes and this wrapper scatters back to the dense
-cotangents the custom_vjp contract requires. The scatter-free end-to-end
-consumer — the fused projection seam that feeds the compact codes straight
-into ``kernels/code_grad.py`` — lives in ``repro/models/attention.py``; this
-op-level mode is the generic correctness-preserving form (and what parity
-tests pin).
+``"dense"`` (n, d) rows, ``"compact"`` (n, k) value-gradients, or
+``"compact2"`` (n, 2k) RoPE pair-closure value-gradients — the compact forms
+the kernel writes in O(n·k) bytes and this wrapper scatters back to the
+dense cotangents the generic custom_vjp contract requires (for
+``"compact2"`` with the pair-closure indices, pinning that the widened emit
+is lossless). The scatter-free end-to-end consumer — the fused projection
+seam that feeds the compact codes straight into ``kernels/code_grad.py``
+(and, on rope'd layers, through ``rope_code_vjp`` first) — lives in
+``repro/models/attention.py``; this op-level mode is the generic
+correctness-preserving form (and what parity tests pin).
 """
 from __future__ import annotations
 
@@ -43,7 +46,7 @@ from repro.core import attention as att
 from repro.kernels.code_grad import scatter_code_grads
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_sfa import flash_sfa
-from repro.kernels.flash_sfa_bwd import flash_sfa_bwd
+from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, pair_closure_indices
 from repro.kernels.rtopk import rtopk
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -111,16 +114,21 @@ def _sfa_bwd(sfa_k, causal, scale, bwd, emit, res, g):
     qv, qi, kv_, ki, vf, out, lse, (qp, kp, vp) = res
     b, n, h, d = g.shape
     gf = fold_heads(g)
-    if emit == "compact":
+    if emit in ("compact", "compact2"):
         # The kernel writes O(n·k) code-gradients; the custom_vjp contract
         # still owes dense (b, n, h, d) cotangents, so scatter here via the
-        # XLA oracle. The train path that never pays this scatter is the
-        # fused projection seam in repro/models/attention.py.
+        # XLA oracle ("compact2" scatters on the pair-closure indices — at
+        # the op level the widening is a lossless relayout, since rope sits
+        # outside the op and its vjp runs through XLA autodiff). The train
+        # path that never pays this scatter is the fused projection seam in
+        # repro/models/attention.py.
         dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
                                       d=d, causal=causal, scale=scale,
-                                      interpret=not _ON_TPU, emit="compact")
-        dqf = scatter_code_grads(dqc, qi, d)
-        dkf = scatter_code_grads(dkc, ki, d)
+                                      interpret=not _ON_TPU, emit=emit)
+        qi_s = pair_closure_indices(qi, d) if emit == "compact2" else qi
+        ki_s = pair_closure_indices(ki, d) if emit == "compact2" else ki
+        dqf = scatter_code_grads(dqc, qi_s, d)
+        dkf = scatter_code_grads(dkc, ki_s, d)
     else:
         dqf, dkf, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
                                       d=d, causal=causal, scale=scale,
@@ -144,7 +152,7 @@ def sfa_attention_op(q, k, v, *, sfa_k: int, causal: bool = True,
     """SFA attention on (b, n, h, d) activations. See module docstring."""
     _check_impl("impl", impl)
     _check_impl("bwd_impl", bwd_impl)
-    _check_impl("bwd_emit", bwd_emit, ("dense", "compact"))
+    _check_impl("bwd_emit", bwd_emit, ("dense", "compact", "compact2"))
     d = q.shape[-1]
     scale = scale if scale is not None else d ** -0.5
     if impl == "pallas":

@@ -39,9 +39,12 @@ def main():
                     choices=["xla", "pallas", "auto"],
                     help="override cfg.attention.backend for the step")
     ap.add_argument("--bwd-emit", default=None,
-                    choices=["dense", "compact"],
+                    choices=["dense", "compact", "compact2"],
                     help="FlashSFA backward emit layout (DESIGN.md §3): "
-                         "compact = (n, k) code-gradients + projection seam")
+                         "compact = (n, k) code-gradients + projection seam "
+                         "(rope'd layers auto-widen to the (n, 2k) pair-"
+                         "closure emit); compact2 = force the pair-widened "
+                         "emit everywhere (parity/bench surface)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -29,11 +29,13 @@ scoring plus densely for the value aggregation, and k_pe densely.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AttentionConfig, ModelConfig
 from repro.core.attention import chunked_attention
@@ -43,7 +45,7 @@ from repro.core.kv_cache import (
 )
 from repro.core.sparse import topk_st, sparsify, SparseCode
 from repro.distributed.sharding import axis_size, constrain
-from repro.kernels.flash_sfa_bwd import flash_sfa_bwd
+from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, pair_closure_indices
 from repro.kernels.flash_sfa_decode import LANES as _FM_TILE, \
     feature_major_prefill
 from repro.kernels.ops import (
@@ -53,7 +55,8 @@ from repro.models.backends import (
     AttentionRequest, DecodeQuery, expand_kv as _expand_kv, select_backend,
 )
 from repro.models.layers import (
-    dense, dense_init, norm_init, apply_norm, rope, sparse_proj_bwd,
+    dense, dense_init, norm_init, apply_norm, rope, rope_code_vjp,
+    sparse_proj_bwd,
 )
 
 
@@ -146,82 +149,177 @@ def _request(a: AttentionConfig, *, mode: str, window) -> AttentionRequest:
 # fused projection + attention seam for compact code-gradients
 # --------------------------------------------------------------------------
 
-def compact_train_eligible(cfg: ModelConfig, window=None) -> bool:
-    """True when a train-mode layer can take the fused compact-backward seam.
+def compact_seam_ineligible_reason(cfg: ModelConfig,
+                                   window=None) -> Optional[str]:
+    """None when a train-mode layer can take the fused compact-backward
+    seam; else a human reason (recorded as a ``CompactSeamReport``).
 
     The seam spans the QKV projection through the FlashSFA kernels in one
-    custom_vjp, so everything in between must be identity: RoPE and qk-norm
-    rotate/rescale the cotangent off the stored top-k support (a k-sparse
-    post-rope gradient is 2k-sparse pre-rope, unaligned to the indices), and
-    windows / rope-protect / MLA / distill need the dense q/k/v outside the
-    seam. The seam also skips the ``_constrain_qkv`` sharding annotations,
-    so it only engages on an unsharded model axis — under tensor parallelism
-    the layer falls back to the constrained path below (op-level compact
-    emit). Ineligible ``bwd_emit="compact"`` layers still get the compact
-    kernel emit at the op level (ops.py scatters for the generic vjp)."""
+    custom_vjp. RoPE *is* admitted: it is a per-pair rotation on known
+    indices, so the backward stays compact — the kernel emits the (n, 2k)
+    pair closure (``emit="compact2"``) and ``rope_code_vjp`` inverse-rotates
+    the codes in place before the projection seam consumes them. Everything
+    else between projection and kernel must be identity: qk-norm rescales
+    the cotangent by data-dependent per-row statistics (off any fixed
+    support), and windows / rope-protect / MLA / distill need the dense
+    q/k/v outside the seam. The seam also skips the ``_constrain_qkv``
+    sharding annotations, so it only engages on an unsharded model axis —
+    under tensor parallelism the layer falls back to the constrained path
+    below (op-level compact emit). Ineligible ``bwd_emit="compact"`` layers
+    still get the compact kernel emit at the op level (ops.py scatters once
+    for the generic vjp)."""
     a = cfg.attention
-    return (a is not None and a.sfa_k is not None
-            and a.bwd_emit == "compact" and a.mla is None
-            and not a.rope and not a.qk_norm
-            and window is None and a.window is None
-            and a.sfa_rope_protect == 0 and cfg.sfa_distill <= 0
-            and axis_size("model") == 1)
+    if a is None or a.sfa_k is None:
+        return "not an SFA layer (sfa_k unset)"
+    if a.bwd_emit not in ("compact", "compact2"):
+        return "bwd_emit is dense"
+    if a.mla is not None:
+        return "MLA projects through the latent space outside the seam"
+    if a.qk_norm:
+        return ("qk-norm rescales the cotangent by per-row statistics, "
+                "off the stored support")
+    if window is not None or a.window is not None:
+        return "windowed layers need the dense q/k for the mask fallback"
+    if a.sfa_rope_protect > 0:
+        return "sfa_rope_protect keeps leading dims dense outside the codes"
+    if cfg.sfa_distill > 0:
+        return "distill needs the dense q/k/v for the stop-grad teacher"
+    if axis_size("model") != 1:
+        return "tensor-parallel model axis needs _constrain_qkv annotations"
+    return None
 
 
-def _sfa_proj_attend_fwd_impl(w, x, h, hkv, hd, sfa_k, causal, scale):
-    """Primal: qkv projection -> GQA expand -> ops.py's pallas primal
-    (one source of truth for the rtopk -> FlashSFA dispatch)."""
+def compact_train_eligible(cfg: ModelConfig, window=None) -> bool:
+    """True when a train-mode layer takes the fused compact-backward seam."""
+    return compact_seam_ineligible_reason(cfg, window) is None
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactSeamReport:
+    """Structured record of a compact-seam routing decision (trace-time).
+
+    The analogue of ``backends.FallbackReport`` for the fused
+    projection+attention backward: every train-mode layer that *asked* for a
+    compact emit gets exactly one record per (site, outcome) saying whether
+    it took the seam, and if not, why — queryable instead of grepping logs.
+    """
+    where: str
+    taken: bool
+    reason: Optional[str] = None     # set when the seam was NOT taken
+
+
+_SEAM_REPORTS: dict = {}
+
+
+def compact_seam_reports() -> tuple:
+    """All deduped seam routing decisions since the last clear."""
+    return tuple(_SEAM_REPORTS.values())
+
+
+def clear_compact_seam_reports() -> None:
+    _SEAM_REPORTS.clear()
+
+
+def _record_seam(where: str, taken: bool, reason: Optional[str]) -> None:
+    key = (where, taken, reason)
+    if key not in _SEAM_REPORTS:
+        _SEAM_REPORTS[key] = CompactSeamReport(where=where, taken=taken,
+                                               reason=reason)
+
+
+def _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k, causal,
+                              scale, rope_spec):
+    """Primal: qkv projection [-> rope] -> GQA expand -> ops.py's pallas
+    primal (one source of truth for the rtopk -> FlashSFA dispatch).
+    rope_spec: None, or the static ``(theta, rot_dim)`` pair."""
     b, n, _ = x.shape
     dt = x.dtype
     qkv = x @ w.astype(dt)
     q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
     q = q.reshape(b, n, h, hd)
-    k = _expand_kv(k.reshape(b, n, hkv, hd), h)
+    k = k.reshape(b, n, hkv, hd)
+    if rope_spec is not None:
+        theta, rot = rope_spec
+        q = rope(q, positions, theta=theta, rot_dim=rot)
+        k = rope(k, positions, theta=theta, rot_dim=rot)
+    k = _expand_kv(k, h)
     v = _expand_kv(v.reshape(b, n, hkv, hd), h)
     out, res = _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale,
                                return_residuals=True)
-    return out, (x, w) + res
+    return out, (x, w, positions) + res
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
-def _sfa_proj_attend_compact(w, x, h, hkv, hd, sfa_k, causal, scale):
-    """Fused QKV-projection + SFA attention with a compact-code backward.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _sfa_proj_attend_compact(w, x, positions, h, hkv, hd, sfa_k, causal,
+                             scale, rope_spec, req_emit):
+    """Fused QKV-projection [+ RoPE] + SFA attention, compact-code backward.
 
-    Forward is exactly the pallas train path (projection -> rtopk ->
-    FlashSFA). The backward runs ``flash_sfa_bwd(emit="compact")`` — O(n·k)
-    dQ̃/dK̃ writes — and hands the code-gradients straight to the projection
-    vjp seam (``layers.sparse_proj_bwd`` -> ``kernels/code_grad.py``): a
-    dense (n, d) dQ/dK is never materialized in HBM anywhere on this path
-    (grep-able contract, tests/test_code_grad.py)."""
-    out, _ = _sfa_proj_attend_fwd_impl(w, x, h, hkv, hd, sfa_k, causal, scale)
+    Forward is exactly the pallas train path (projection [-> rope] -> rtopk
+    -> FlashSFA). The backward runs ``flash_sfa_bwd`` with a compact emit —
+    ``"compact"`` (n, k) on rope-free layers, ``"compact2"`` (n, 2k) pair
+    closures on rope'd layers, where ``rope_code_vjp`` inverse-rotates the
+    codes in place (a rope-free layer explicitly configured with
+    ``req_emit="compact2"`` also gets the widened emit, honoring the
+    launch-flag contract of forcing the pair-widened kernel path) — and
+    hands the code-gradients straight to the projection vjp seam
+    (``layers.sparse_proj_bwd`` -> ``kernels/code_grad.py``): a dense (n, d)
+    dQ/dK is never materialized in HBM anywhere on this path (grep-able
+    contract, tests/test_code_grad.py + tests/test_rope_seam.py).
+    """
+    out, _ = _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k,
+                                       causal, scale, rope_spec)
     return out
 
 
-def _sfa_proj_attend_fwd(w, x, h, hkv, hd, sfa_k, causal, scale):
-    return _sfa_proj_attend_fwd_impl(w, x, h, hkv, hd, sfa_k, causal, scale)
+def _sfa_proj_attend_fwd(w, x, positions, h, hkv, hd, sfa_k, causal, scale,
+                         rope_spec, req_emit):
+    return _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k,
+                                     causal, scale, rope_spec)
 
 
-def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, res, g):
-    x, w, qv, qi, kv_, ki, vf, out, lse = res
+def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, rope_spec,
+                         req_emit, res, g):
+    x, w, positions, qv, qi, kv_, ki, vf, out, lse = res
     b, n, _, _ = g.shape
     m = x.shape[-1]
     group = h // hkv
     interp = not _ON_TPU
     gf = fold_heads(g)
+    pair_widen = rope_spec is not None or req_emit == "compact2"
+    emit = "compact2" if pair_widen else "compact"
+    rot = hd if rope_spec is None else rope_spec[1]
     dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf, d=hd,
                                   causal=causal, scale=scale,
-                                  interpret=interp, emit="compact")
-    kq = dqc.shape[-1]
+                                  interpret=interp, emit=emit, rot_dim=rot)
+    if not pair_widen:
+        qi_c, ki_c = qi, ki
+    else:
+        # pair-widened path: the kernel emitted the (n, 2k) pair closure of
+        # the stored indices — still O(n·k) work and bytes, still no dense
+        # dQ/dK anywhere. With rope, inverse-rotate the code cotangents in
+        # place; a forced compact2 on a rope-free layer skips the rotation
+        # (the closure relayout alone is lossless).
+        qi_c = pair_closure_indices(qi, rot)
+        ki_c = pair_closure_indices(ki, rot)
+        if rope_spec is not None:
+            theta, rot = rope_spec
+            posf = jnp.broadcast_to(positions, (b, n))
+            posf = jnp.broadcast_to(posf[:, None],
+                                    (b, h, n)).reshape(b * h, n)
+            dqc = rope_code_vjp(dqc, qi_c, posf, theta=theta, rot_dim=rot)
+            dkc = rope_code_vjp(dkc, ki_c, posf, theta=theta, rot_dim=rot)
+    kq = dqc.shape[-1]                    # code width: k, or 2k pair-widened
     # per-head code-grad stacks over the flattened (b·n) token axis
     dq_vals = (dqc.reshape(b, h, n, kq).transpose(1, 0, 2, 3)
                .reshape(h, b * n, kq))
-    dq_idx = (qi.reshape(b, h, n, kq).transpose(1, 0, 2, 3)
+    dq_idx = (qi_c.reshape(b, h, n, kq).transpose(1, 0, 2, 3)
               .reshape(h, b * n, kq))
     # GQA: the head repeat precedes rtopk, so group members carry identical
-    # indices — the group reduction is a plain aligned sum of code values
+    # indices (hence identical pair closures) — the group reduction is a
+    # plain aligned sum of code values
     dk_vals = (dkc.reshape(b, hkv, group, n, kq).sum(2)
                .transpose(1, 0, 2, 3).reshape(hkv, b * n, kq))
-    dk_idx = (ki.reshape(b, hkv, group, n, kq)[:, :, 0]
+    dk_idx = (ki_c.reshape(b, hkv, group, n, kq)[:, :, 0]
               .transpose(1, 0, 2, 3).reshape(hkv, b * n, kq))
     dv = dvf.reshape(b, hkv, group, n, hd).sum(2)            # (b, hkv, n, hd)
     dv_flat = jnp.moveaxis(dv, 1, 2).reshape(b * n, hkv * hd)
@@ -242,7 +340,9 @@ def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, res, g):
          jnp.moveaxis(dwk, 0, 1).reshape(m, hkv * hd), dwv],
         axis=1).astype(w.dtype)
     dx = (dx_q + dx_k + dx_v).reshape(b, n, m).astype(x.dtype)
-    return dw, dx
+    # positions are integer coordinates: their cotangent is the float0 zero
+    dpos = np.zeros(positions.shape, jax.dtypes.float0)
+    return dw, dx, dpos
 
 
 _sfa_proj_attend_compact.defvjp(_sfa_proj_attend_fwd, _sfa_proj_attend_bwd)
@@ -326,24 +426,45 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
                     window=None, mode: str = "train", cache=None,
                     cache_len=None) -> AttentionOut:
     a = cfg.attention
+    wants_seam = (mode == "train" and a is not None and a.sfa_k is not None
+                  and a.bwd_emit in ("compact", "compact2"))
     if a.mla is not None:
+        if wants_seam:
+            _record_seam(f"{cfg.name}/attention", False,
+                         compact_seam_ineligible_reason(cfg, window))
         return _mla_apply(params, x, cfg=cfg, positions=positions, mode=mode,
                           cache=cache, cache_len=cache_len)
     b, n, d_model = x.shape
     h, hkv, hd = a.num_heads, a.num_kv_heads, a.head_dim
     dt = x.dtype
-    if mode == "train" and compact_train_eligible(cfg, window):
-        sel = select_backend(a.backend,
-                             _request(a, mode="full", window=window),
-                             where=f"{cfg.name}/attention")
-        if sel.backend.name == "pallas":
+    if wants_seam:
+        reason = compact_seam_ineligible_reason(cfg, window)
+        if reason is None:
+            sel = select_backend(a.backend,
+                                 _request(a, mode="full", window=window),
+                                 where=f"{cfg.name}/attention")
+            if sel.backend.name != "pallas":
+                reason = (f"backend resolved to {sel.backend.name!r}; the "
+                          f"seam wraps the pallas kernels")
+        if reason is None:
             # fused projection+attention custom_vjp: the backward consumes
-            # the kernels' compact (n, k) code-gradients directly — no
-            # dense dQ/dK round-trip (DESIGN.md §3)
-            o = _sfa_proj_attend_compact(params["w_qkv"]["w"], x, h, hkv,
-                                         hd, a.sfa_k, a.causal, hd ** -0.5)
+            # the kernels' compact code-gradients directly — (n, k), or the
+            # (n, 2k) pair closure rotated through rope_code_vjp on rope'd
+            # layers — no dense dQ/dK round-trip (DESIGN.md §3)
+            _record_seam(f"{cfg.name}/attention", True, None)
+            if a.rope:
+                pos = (positions if positions is not None
+                       else jnp.arange(n)[None, :])
+                rope_spec = (a.rope_theta, hd)
+            else:
+                pos = jnp.zeros((1, 1), jnp.int32)       # unused by the seam
+                rope_spec = None
+            o = _sfa_proj_attend_compact(params["w_qkv"]["w"], x, pos, h,
+                                         hkv, hd, a.sfa_k, a.causal,
+                                         hd ** -0.5, rope_spec, a.bwd_emit)
             out = dense(params["w_o"], o.reshape(b, n, h * hd).astype(dt), dt)
             return AttentionOut(out, None)
+        _record_seam(f"{cfg.name}/attention", False, reason)
     qkv = dense(params["w_qkv"], x, dt)
     q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
     q = q.reshape(b, n, h, hd)

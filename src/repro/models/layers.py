@@ -136,6 +136,43 @@ def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
     return rotated.astype(x.dtype)
 
 
+def rope_code_vjp(vals: jax.Array, idx: jax.Array, positions: jax.Array, *,
+                  theta: float = 10_000.0, rot_dim: int) -> jax.Array:
+    """Rope's vjp applied directly on (…, 2k) pair-closure code cotangents.
+
+    RoPE rotates head dims in (2j, 2j+1) pairs, so a k-sparse post-rope
+    cotangent is exactly 2k-sparse pre-rope on the *known* pair closure of
+    the stored indices (DESIGN.md §3). ``vals``/``idx`` follow the
+    ``emit="compact2"`` layout (``kernels.flash_sfa_bwd.pair_closure_indices``):
+    two concatenated k-wide halves holding each stored index's even and odd
+    pair member. Per closure entry t the inverse rotation Rᵀ of the pair's
+    angle mixes the two halves in place:
+
+        dpre_even = cos·ge + sin·go      dpre_odd = −sin·ge + cos·go
+
+    Entries whose base index is at or beyond ``rot_dim`` (partial rotation)
+    never rotated, so their cotangent passes through untouched — the closure
+    left them unwidened (odd half pinned to zero), and the identity branch
+    here keeps it that way. O(n·k) elementwise work on the code values; no
+    scatter, no dense rebuild, no (n, d) tensor anywhere.
+
+    vals/idx: (…, 2k); positions: broadcastable to vals.shape[:-1].
+    Returns the pre-rope code cotangents, same shape/indices/dtype.
+    """
+    kw = vals.shape[-1] // 2
+    ge = vals[..., :kw].astype(jnp.float32)
+    go = vals[..., kw:].astype(jnp.float32)
+    base = idx[..., :kw]
+    rotated = base < rot_dim
+    # pair j's frequency: theta^(-2j/rot_dim), exactly rope()'s table
+    freqs = theta ** (-(base // 2 * 2).astype(jnp.float32) / rot_dim)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    de = jnp.where(rotated, c * ge + s * go, ge)
+    do = jnp.where(rotated, c * go - s * ge, go)
+    return jnp.concatenate([de, do], axis=-1).astype(vals.dtype)
+
+
 def chunked_cross_entropy(hidden: jax.Array, emb_w: jax.Array,
                           labels: jax.Array, *, chunk: int = 512,
                           mask: jax.Array | None = None):

@@ -12,11 +12,12 @@ trains through the Pallas FlashSFA forward AND backward kernels (fwd+bwd
 speedups measured end-to-end, see benchmarks/bench_pretrain.py), ``"xla"``
 forces the pure-JAX path. ``bwd_emit`` likewise overrides
 ``cfg.attention.bwd_emit``: ``"compact"`` makes the FlashSFA backward write
-(n, k) code-gradients and — on eligible layers — routes the projection
-backward through the compact-code seam (kernels/code_grad.py), cutting the
-attention backward's dQ/dK write traffic from O(n·d) to O(n·k). Weight
-gradients stay dense: the sparsity is consumed at the projection vjp, so
-the AdamW update is unchanged.
+(n, k) code-gradients and — on eligible layers, RoPE'd ones included, which
+auto-widen to the (n, 2k) pair-closure emit rotated through
+``rope_code_vjp`` — routes the projection backward through the compact-code
+seam (kernels/code_grad.py), cutting the attention backward's dQ/dK write
+traffic from O(n·d) to O(n·k). Weight gradients stay dense: the sparsity is
+consumed at the projection vjp, so the AdamW update is unchanged.
 """
 from __future__ import annotations
 

@@ -29,7 +29,8 @@ class TrainerConfig:
     # repro/models/backends.py).
     attn_backend: Optional[str] = None
     # None = use cfg.attention.bwd_emit; "compact" = FlashSFA backward emits
-    # (n, k) code-gradients consumed by the projection seam (DESIGN.md §3).
+    # (n, k) code-gradients consumed by the projection seam — rope'd layers
+    # auto-widen to the (n, 2k) pair-closure emit (DESIGN.md §3).
     bwd_emit: Optional[str] = None
     ft: FTConfig = dataclasses.field(default_factory=FTConfig)
 

@@ -1,0 +1,112 @@
+"""Unit pins for the CI perf-trajectory gate (benchmarks/check_trajectory.py).
+
+Pure-logic tests: no kernels run here — the CI tier1 step runs the real
+smoke + gate; these pin the comparison semantics it relies on (n-normalized
+keys, one-directional schema growth, regression directions, tolerance).
+"""
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks import check_trajectory as ct  # noqa: E402
+
+
+def _row(name, derived):
+    return {"name": name, "derived": derived}
+
+
+BASE = [
+    _row("attn_bwd_n256_d64_k8",
+         "dense_us=100;compact_us=90;byte_ratio=1.42;"
+         "byte_ratio_compact=1.89;write_B_dense=98304;write_B_compact=40960;"
+         "tpu_model_speedup=1.42"),
+    _row("decode_n512_d64_k8", "fm_us=3729;byte_ratio=1.68"),
+]
+
+
+def test_keys_ignore_n_and_normalize_write_bytes():
+    key, fields = ct.gated_fields("attn_bwd_n256_d64_k8",
+                                  "byte_ratio=1.5;write_B_dense=98304")
+    assert key == ("attn_bwd", 64, 8)
+    assert fields["byte_ratio"] == ("higher", 1.5)
+    assert fields["write_B_dense"] == ("lower", 98304 / 256)
+    # measured wall-clock fields are never gated, and neither are the
+    # roofline speedups — max(flops, bytes) crosses over with n, so a
+    # (kind, d, k) key cannot compare them across sweep sizes honestly
+    _, f2 = ct.gated_fields(
+        "attn_n128_d64_k8",
+        "dense_us=123;byte_ratio=1.6;tpu_model_speedup=1.6;"
+        "tpu_model_speedup_compact=1.9")
+    assert "dense_us" not in f2
+    assert not any(f.startswith("tpu_model_speedup") for f in f2)
+    assert ct.gated_fields("not_a_bench_row", "byte_ratio=9")[0] is None
+
+
+def test_same_model_at_different_n_passes():
+    new = [_row("attn_bwd_n128_d64_k8",
+                "byte_ratio=1.42;byte_ratio_compact=1.89;"
+                "write_B_dense=49152;write_B_compact=20480;"
+                "tpu_model_speedup=1.42"),
+           _row("decode_n128_d64_k8", "byte_ratio=1.68")]
+    assert ct.compare(BASE, new, tol=0.02) == []
+
+
+def test_new_fields_are_allowed_but_dropped_fields_fail():
+    grown = [_row("attn_bwd_n128_d64_k8",
+                  "byte_ratio=1.42;byte_ratio_compact=1.89;"
+                  "byte_ratio_compact2=1.81;"          # schema may grow
+                  "write_B_dense=49152;write_B_compact=20480;"
+                  "tpu_model_speedup=1.42"),
+             _row("decode_n128_d64_k8", "byte_ratio=1.68")]
+    assert ct.compare(BASE, grown, tol=0.02) == []
+    shrunk = [_row("attn_bwd_n128_d64_k8",
+                   "byte_ratio=1.42;"                  # compact fields gone
+                   "write_B_dense=49152;tpu_model_speedup=1.42"),
+              _row("decode_n128_d64_k8", "byte_ratio=1.68")]
+    probs = ct.compare(BASE, shrunk, tol=0.02)
+    assert any("byte_ratio_compact" in p and "disappeared" in p
+               for p in probs)
+
+
+def test_ratio_regression_fails_and_tolerance_holds():
+    def rows(ratio, write_b):
+        return [_row("attn_bwd_n256_d64_k8",
+                     f"byte_ratio=1.42;byte_ratio_compact={ratio};"
+                     f"write_B_dense=98304;write_B_compact={write_b};"
+                     f"tpu_model_speedup=1.42"),
+                _row("decode_n512_d64_k8", "byte_ratio=1.68")]
+    assert ct.compare(BASE, rows(1.87, 40960), tol=0.02) == []   # within tol
+    probs = ct.compare(BASE, rows(1.70, 40960), tol=0.02)
+    assert any("byte_ratio_compact regressed" in p for p in probs)
+    probs = ct.compare(BASE, rows(1.89, 81920), tol=0.02)        # 2x writes
+    assert any("write_B_compact regressed" in p for p in probs)
+
+
+def test_missing_row_kind_fails():
+    new = [_row("attn_bwd_n128_d64_k8", "byte_ratio=1.42;"
+                "byte_ratio_compact=1.89;write_B_dense=49152;"
+                "write_B_compact=20480;tpu_model_speedup=1.42")]
+    probs = ct.compare(BASE, new, tol=0.02)
+    assert any("decode" in p and "missing" in p for p in probs)
+
+
+def test_gate_passes_against_committed_snapshot_schema():
+    """The committed trajectory must parse and produce gated fields — the CI
+    step depends on that (no kernels: snapshot-side only)."""
+    path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_attention.json"
+    rows = ct.load_baseline(path, -1)
+    indexed = ct.index_rows(rows)
+    assert indexed, "committed snapshot produced no gated rows"
+    kinds = {k[0] for k in indexed}
+    assert {"attn", "attn_bwd", "decode"} <= kinds
+    # self-comparison is a fixed point of the gate
+    assert ct.compare(rows, rows, tol=0.0) == []
+
+
+def test_empty_trajectory_is_an_error(tmp_path):
+    p = tmp_path / "BENCH_attention.json"
+    p.write_text("[]")
+    with pytest.raises(SystemExit):
+        ct.load_baseline(p, -1)

@@ -119,8 +119,9 @@ def test_compact_train_path_grad_parity(rng, h, hkv):
 
 
 def test_compact_seam_is_actually_taken(rng, monkeypatch):
-    """The eligible train config must route through the fused seam (and the
-    ineligible rope config must not) — eligibility is trace-time, so a
+    """The eligible train config must route through the fused seam — rope'd
+    layers included since the pair-widened (n, 2k) path (ISSUE 5) — and the
+    ineligible qk-norm config must not. Eligibility is trace-time, so a
     counter on the seam function observes it directly."""
     calls = []
     orig = attn._sfa_proj_attend_compact
@@ -138,10 +139,18 @@ def test_compact_seam_is_actually_taken(rng, monkeypatch):
     calls.clear()
     cfg_rope = dataclasses.replace(
         cfg, attention=dataclasses.replace(cfg.attention, rope=True))
-    assert not attn.compact_train_eligible(cfg_rope)
+    assert attn.compact_train_eligible(cfg_rope), \
+        "rope layers are seam-eligible via the pair-widened backward"
     params = attn.attention_init(rng, cfg_rope)
     attn.attention_apply(params, x, cfg=cfg_rope, mode="train")
-    assert not calls, "rope layer must not take the compact seam"
+    assert calls, "rope layer must take the pair-widened compact seam"
+    calls.clear()
+    cfg_qkn = dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, qk_norm=True))
+    assert not attn.compact_train_eligible(cfg_qkn)
+    params = attn.attention_init(rng, cfg_qkn)
+    attn.attention_apply(params, x, cfg=cfg_qkn, mode="train")
+    assert not calls, "qk-norm layer must not take the compact seam"
 
 
 @pytest.mark.slow
@@ -184,7 +193,12 @@ def test_compact_train_path_never_scatters_dense():
     any densify/one-hot rebuild of a dense dQ/dK may appear in the fused
     backward or the projection seam. (``scatter_code_grads`` itself lives on
     as the oracle; ops.py's generic op-level vjp is allowed to use it.)"""
-    for fn in (attn._sfa_proj_attend_bwd, sparse_proj_bwd):
+    from repro.kernels.flash_sfa_bwd import pair_closure_indices
+    from repro.models.layers import rope_code_vjp
+    # rope'd seam extension (ISSUE 5): the pair-closure widening and the
+    # rope vjp on codes are on the compact path too — same ban applies
+    for fn in (attn._sfa_proj_attend_bwd, sparse_proj_bwd, rope_code_vjp,
+               pair_closure_indices):
         src = inspect.getsource(fn)
         assert "scatter_code_grads" not in src, fn.__name__
         assert "densify" not in src, fn.__name__
