@@ -1,0 +1,180 @@
+"""Serving-engine benchmark: Poisson arrivals through the slot engine and
+the paged engine under the SAME cache byte budget.
+
+A seeded trace of requests (Poisson inter-arrivals, mixed prompt/output
+lengths) is driven through three engines:
+
+  * ``slot``          — the contiguous-slot ``DecodeEngine``; each slot
+                        reserves ``max_len`` cache positions for its whole
+                        lifetime, so concurrency is capped by
+                        ``budget / max_len`` regardless of actual lengths.
+  * ``paged``         — ``PagedDecodeEngine`` with whole-prompt prefill:
+                        the same byte budget buys a shared page pool, so
+                        short/ragged requests hold only the pages they
+                        use and more of them run concurrently.
+  * ``paged_chunked`` — same, with chunked prefill interleaved into decode
+                        steps (no whole-prompt stall for running streams).
+
+Reported per engine: wall-clock µs/step and tokens/s (trend-only, never
+gated) plus the deterministic scheduling metrics the CI trajectory gate
+pins — tokens/step, p50/p99 request latency in engine ticks, and mean
+cache utilization (live tokens / token capacity of the byte budget).
+Determinism: greedy decode with ``eos_id=-1`` means termination depends
+only on budgets and lengths, never on sampled token *values*, so every
+gated number is identical across platforms and reruns.
+
+Unlike the attention suite (n-invariant byte models), serving metrics are
+trace-dependent: ``smoke`` mode therefore runs the *same* trace as quick
+mode, and the gate compares equals to equals. ``--full`` adds a second,
+longer-prompt mix (extra snapshot keys show up as uncovered in the smoke
+gate, exactly like the attention full sweep).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serve import (DecodeEngine, EngineConfig, PagedDecodeEngine,
+                         PagedEngineConfig)
+
+ARCH = "gpt2-small-sfa8"
+MAX_LEN = 48
+PAGE = 8
+SLOT_SLOTS = 4          # the byte budget = this many contiguous slots
+PAGED_SLOTS = 12        # paged concurrency cap (pool-limited in practice)
+
+MIXES = {
+    # arrival rate in engine ticks; prompt/output length menus. Dense
+    # enough that admission queues: the interesting regime is the one
+    # where the slot engine's reservation cap binds.
+    "mixed": dict(n_req=16, lam=1.0, plens=(3, 5, 9, 14, 22),
+                  news=(4, 6, 9, 12)),
+    "long": dict(n_req=10, lam=2.0, plens=(14, 22, 30), news=(8, 12, 16)),
+}
+
+
+def _trace(mix: str, seed: int = 0):
+    """[(arrival_tick, prompt, max_new)] — seeded, fully deterministic."""
+    spec = MIXES[mix]
+    rng = np.random.default_rng(seed)
+    gaps = rng.poisson(spec["lam"], spec["n_req"])
+    arrivals = np.cumsum(gaps) - gaps[0]          # first request at t=0
+    out = []
+    for i in range(spec["n_req"]):
+        plen = int(rng.choice(spec["plens"]))
+        mn = int(rng.choice(spec["news"]))
+        prompt = rng.integers(1, 200, plen).astype(np.int64)
+        out.append((int(arrivals[i]), prompt, mn))
+    return out
+
+
+def _params(cfg):
+    import jax
+
+    from repro.models import init as model_init
+    return model_init(jax.random.PRNGKey(0), cfg)
+
+
+def _drive_slot(eng: DecodeEngine, reqs):
+    """Slot engine + an external FCFS admission queue (the engine itself
+    has none). Returns (busy_steps, latencies, util_samples, tokens)."""
+    pending = list(reqs)
+    inflight = {}                                  # slot -> arrival tick
+    cap = eng.ecfg.max_slots * eng._cache_len
+    t, steps, tokens = 0, 0, 0
+    lat, util = [], []
+    while pending or eng.live.any():
+        if not eng.live.any() and pending and pending[0][0] > t:
+            t = pending[0][0]                      # idle: jump to arrival
+        while (pending and pending[0][0] <= t
+               and bool((~eng.live).any())):
+            _, prompt, mn = pending.pop(0)
+            slot = eng.add_request(prompt, max_new_tokens=mn)
+            inflight[slot] = t
+            tokens += mn                           # deterministic: eos=-1
+        eng.step()
+        steps += 1
+        t += 1
+        util.append(float(eng.lengths[eng.live].sum()) / cap)
+        for slot in [s for s in inflight if not eng.live[s]]:
+            lat.append(t - inflight.pop(slot))
+    return steps, lat, util, tokens
+
+
+def _drive_paged(eng: PagedDecodeEngine, reqs):
+    pending = list(reqs)
+    arrived = {}                                   # rid -> arrival tick
+    cap = (eng.num_pages - 1) * eng.ecfg.page_size
+    t, steps, tokens = 0, 0, 0
+    lat, util = [], []
+    while pending or eng.busy:
+        if not eng.busy and pending and pending[0][0] > t:
+            t = pending[0][0]
+        while pending and pending[0][0] <= t:
+            _, prompt, mn = pending.pop(0)
+            arrived[eng.add_request(prompt, max_new_tokens=mn)] = t
+            tokens += mn                           # deterministic: eos=-1
+        eng.step()
+        steps += 1
+        t += 1
+        util.append(float(eng.lengths[eng.live].sum()) / cap)
+        for rid in [r for r in arrived if eng.done[r]]:
+            lat.append(t - arrived.pop(rid))
+    return steps, lat, util, tokens
+
+
+def _engines(cfg, params):
+    """(name, factory) triples; the paged budget equals the slot engine's
+    realized cache bytes, so the comparison is byte-for-byte."""
+    def slot():
+        return DecodeEngine(params, cfg, EngineConfig(
+            max_slots=SLOT_SLOTS, max_len=MAX_LEN))
+
+    budget = slot().cache_bytes()
+
+    def paged(chunk):
+        return PagedDecodeEngine(params, cfg, PagedEngineConfig(
+            max_slots=PAGED_SLOTS, max_len=MAX_LEN, page_size=PAGE,
+            mem_budget_bytes=budget, prefill_chunk=chunk))
+
+    return [("slot", slot, _drive_slot),
+            ("paged", lambda: paged(None), _drive_paged),
+            ("paged_chunked", lambda: paged(PAGE), _drive_paged)]
+
+
+def run(quick: bool = True, smoke: bool = False):
+    """Returns rows of (name, us_per_step, derived). ``smoke`` runs the
+    identical quick trace (serving metrics are trace-dependent, so the CI
+    gate must compare the same workload the snapshot recorded)."""
+    del smoke
+    cfg = dataclasses.replace(get_config(ARCH).reduced(), dtype="float32")
+    params = _params(cfg)
+    rows = []
+    mixes = ("mixed",) if quick else ("mixed", "long")
+    for mix in mixes:
+        reqs = _trace(mix)
+        for name, make, drive in _engines(cfg, params):
+            drive(make(), reqs)                    # warm the jit caches
+            t0 = time.perf_counter()
+            steps, lat, util, tokens = drive(make(), reqs)
+            wall = time.perf_counter() - t0
+            lat = np.asarray(sorted(lat))
+            assert len(lat) == len(reqs), (name, mix, "requests lost")
+            derived = (
+                f"tok_per_step={tokens / steps:.3f};"
+                f"p50_steps={float(np.percentile(lat, 50)):.1f};"
+                f"p99_steps={float(np.percentile(lat, 99)):.1f};"
+                f"util={float(np.mean(util)):.4f};"
+                f"util_peak={float(np.max(util)):.4f};"
+                f"steps={steps};tokens={tokens};"
+                f"toks_per_s_wall={tokens / wall:.0f}")
+            rows.append((f"serve_{mix}_{name}", wall / steps * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -31,10 +31,18 @@ timing is trend-only noise), and neither are ``tpu_model_speedup*`` fields:
 the roofline max(flops, bytes) crosses over with n, so they are NOT
 n-invariant and a (kind, d, k) key cannot gate them honestly.
 
+Serving rows (``BENCH_serving.json``, ``serve_<mix>_<engine>``) gate the
+same way with their own field set: tokens/step, p50/p99 latency in engine
+ticks, and cache utilization — deterministic scheduling metrics (greedy,
+``eos_id=-1``: termination never depends on sampled token values) measured
+on the same seeded trace in smoke and quick mode, so no n-normalization is
+needed. Wall-clock tokens/s is reported in the rows but never gated.
+
 An *intentional* byte-model change (e.g. a cheaper emit) that moves a ratio
 down must regenerate the snapshot in the same PR
 (``PYTHONPATH=src python -m benchmarks.run --only attention``), which is
-exactly the trajectory discipline the gate enforces.
+exactly the trajectory discipline the gate enforces — the same applies to
+intentional scheduler changes and ``--only serving``.
 """
 from __future__ import annotations
 
@@ -46,12 +54,28 @@ import re
 ROW_RE = re.compile(
     r"^(?P<kind>attn_bwd|attn|decode)_n(?P<n>\d+)_d(?P<d>\d+)_k(?P<k>\d+)$")
 
+# serving rows are keyed by traffic mix + engine; their gated fields are
+# deterministic scheduling metrics (greedy decode, eos_id=-1: termination
+# never depends on sampled token values), measured on the SAME trace in
+# smoke and quick mode — so unlike the attention rows there is no
+# n-normalization, the numbers must simply reproduce.
+SERVE_ROW_RE = re.compile(r"^serve_(?P<mix>[a-z]+)_(?P<engine>[a-z0-9_]+)$")
+
 # gated field prefixes: (prefix, direction, normalize_by_n). Only
 # n-invariant quantities belong here — tpu_model_speedup* is excluded
 # because the roofline max(flops, bytes) crosses over with n.
 GATES = (
     ("byte_ratio", "higher", False),
     ("write_B", "lower", True),
+)
+
+# serving gates: wall-clock fields (*_us, toks_per_s_wall) are never
+# gated; steps/tokens counts are covered through tok_per_step.
+SERVE_GATES = (
+    ("tok_per_step", "higher", False),
+    ("p50_steps", "lower", False),
+    ("p99_steps", "lower", False),
+    ("util", "higher", False),
 )
 
 
@@ -72,17 +96,25 @@ def parse_derived(derived: str) -> dict:
 def gated_fields(name: str, derived: str):
     """Row -> ((kind, d, k), {field: (direction, normalized value)}).
 
-    Returns (None, {}) for rows outside the gate's name grammar."""
+    Serving rows key as ("serve", mix, engine) with their own gate set.
+    Returns (None, {}) for rows outside both name grammars."""
     m = ROW_RE.match(name)
-    if m is None:
-        return None, {}
-    n = int(m.group("n"))
-    key = (m.group("kind"), int(m.group("d")), int(m.group("k")))
+    if m is not None:
+        n = int(m.group("n"))
+        key = (m.group("kind"), int(m.group("d")), int(m.group("k")))
+        gates = GATES
+    else:
+        m = SERVE_ROW_RE.match(name)
+        if m is None:
+            return None, {}
+        n = 1
+        key = ("serve", m.group("mix"), m.group("engine"))
+        gates = SERVE_GATES
     fields = {}
     for f, v in parse_derived(derived).items():
         if not isinstance(v, float):
             continue
-        for prefix, direction, per_token in GATES:
+        for prefix, direction, per_token in gates:
             if f.startswith(prefix):
                 fields[f] = (direction, v / n if per_token else v)
                 break
@@ -143,44 +175,57 @@ def load_baseline(path: pathlib.Path, entry: int) -> list:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    root = pathlib.Path(__file__).resolve().parent.parent
     ap.add_argument("--baseline", type=pathlib.Path,
-                    default=pathlib.Path(__file__).resolve().parent.parent
-                    / "BENCH_attention.json")
+                    default=root / "BENCH_attention.json")
+    ap.add_argument("--serving-baseline", type=pathlib.Path,
+                    default=root / "BENCH_serving.json")
     ap.add_argument("--entry", type=int, default=-1,
                     help="which snapshot to gate against (default: last)")
     ap.add_argument("--tol", type=float, default=0.02,
                     help="relative tolerance before a drift fails the gate")
     args = ap.parse_args()
 
-    baseline = load_baseline(args.baseline, args.entry)
     try:
-        from benchmarks import bench_attention
+        from benchmarks import bench_attention, bench_serving
     except ImportError:
         import bench_attention
-    raw = bench_attention.run(quick=True, smoke=True)
-    # echo the smoke rows: this step doubles as the CI bench smoke (the
-    # realized==analytic asserts already fired inside run())
+        import bench_serving
+
+    problems = []
     print("name,us_per_call,derived")
-    for r in raw:
-        print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
-    rows = [{"name": r[0], "derived": r[2]} for r in raw]
-    problems = compare(baseline, rows, tol=args.tol)
-    gated = index_rows(rows)
-    uncovered = sorted(index_rows(baseline).keys() - gated.keys())
-    print(f"trajectory gate: {len(gated)} smoke row keys vs snapshot "
-          f"{args.baseline.name}[{args.entry}] (tol {args.tol:.0%})")
-    if uncovered:
-        print(f"note: {len(uncovered)} snapshot keys outside the smoke "
-              f"sweep (ungated here; regenerating the snapshot covers "
-              f"them): {uncovered}")
+    suites = [("attention", bench_attention, args.baseline)]
+    if args.serving_baseline.exists():
+        suites.append(("serving", bench_serving, args.serving_baseline))
+    else:
+        print(f"note: {args.serving_baseline.name} absent — serving rows "
+              f"ungated (seed with `python -m benchmarks.run "
+              f"--only serving`)")
+    for suite, mod, base_path in suites:
+        baseline = load_baseline(base_path, args.entry)
+        # echo the smoke rows: this step doubles as the CI bench smoke
+        # (the attention realized==analytic asserts fired inside run())
+        raw = mod.run(quick=True, smoke=True)
+        for r in raw:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+        rows = [{"name": r[0], "derived": r[2]} for r in raw]
+        problems += compare(baseline, rows, tol=args.tol)
+        gated = index_rows(rows)
+        uncovered = sorted(index_rows(baseline).keys() - gated.keys())
+        print(f"trajectory gate [{suite}]: {len(gated)} smoke row keys vs "
+              f"snapshot {base_path.name}[{args.entry}] (tol {args.tol:.0%})")
+        if uncovered:
+            print(f"note: {len(uncovered)} snapshot keys outside the smoke "
+                  f"sweep (ungated here; regenerating the snapshot covers "
+                  f"them): {uncovered}")
     if problems:
         for p in problems:
             print(f"FAIL: {p}")
-        print("(intentional byte-model changes must regenerate the snapshot "
-              "in the same PR: PYTHONPATH=src python -m benchmarks.run "
-              "--only attention)")
+        print("(intentional byte-model or scheduling changes must "
+              "regenerate the snapshot in the same PR: PYTHONPATH=src "
+              "python -m benchmarks.run --only attention|serving)")
         raise SystemExit(1)
-    print("OK: no byte-model regression")
+    print("OK: no trajectory regression")
 
 
 if __name__ == "__main__":

@@ -9,11 +9,13 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
     bench_topk       -> Table 8 (RTopK overhead share)
     bench_pretrain   -> Table 1 (dense vs short-embedding vs SFA parity)
     bench_niah       -> Table 2 / Appendix K (NIAH accuracy & generalization)
+    bench_serving    -> beyond-paper: paged-KV serving engine vs slot engine
+                        (Poisson traffic, same byte budget)
 
-The attention suite additionally appends a snapshot (fwd+bwd+decode rows
-with their analytic byte models, git SHA, UTC timestamp) to
-``BENCH_attention.json`` at the repo root, so the perf trajectory
-accumulates run over run instead of scrolling away in CI logs.
+The attention and serving suites additionally append a snapshot (rows with
+their analytic byte models / deterministic scheduling metrics, git SHA,
+UTC timestamp) to ``BENCH_<suite>.json`` at the repo root, so the perf
+trajectory accumulates run over run instead of scrolling away in CI logs.
 """
 from __future__ import annotations
 
@@ -26,7 +28,8 @@ import sys
 import time
 
 from benchmarks import (bench_attention, bench_kv_cache, bench_flops,
-                        bench_topk, bench_pretrain, bench_niah)
+                        bench_topk, bench_pretrain, bench_niah,
+                        bench_serving)
 
 SUITES = {
     "attention": bench_attention,
@@ -35,9 +38,10 @@ SUITES = {
     "topk": bench_topk,
     "pretrain": bench_pretrain,
     "niah": bench_niah,
+    "serving": bench_serving,
 }
 
-SNAPSHOT_SUITES = ("attention",)
+SNAPSHOT_SUITES = ("attention", "serving")
 
 
 def _git_sha() -> str:

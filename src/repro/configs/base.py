@@ -198,7 +198,7 @@ def shape_by_name(name: str) -> ShapeConfig:
 
 
 def skip_reason(model: ModelConfig, shape: ShapeConfig) -> Optional[str]:
-    """Assignment skip rules (DESIGN.md §6). None = run the cell."""
+    """Assignment skip rules (DESIGN.md §7). None = run the cell."""
     if not model.causal and shape.kind == "decode":
         return "encoder-only: no autoregressive decode step"
     if shape.name == "long_500k":

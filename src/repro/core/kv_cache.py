@@ -45,6 +45,10 @@ lands it in a slot of the batched cache (overwriting the whole token axis,
 so slot reuse can never leak a stale feature column). Index
 packing/unpacking helpers live here too (re-exported by
 ``repro.serve.kv_cache`` for the byte accounting).
+
+Each layout also has a *paged* counterpart (``PagedKV`` subclasses below):
+the same field layouts pooled into on-demand pages behind a vLLM-style
+block table, serving ``PagedDecodeEngine`` (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -254,6 +258,440 @@ class MLASparseKV(KVCache):
     kpe: jax.Array
     ckv_sp_vals: jax.Array
     ckv_sp_idx: jax.Array
+
+
+# --------------------------------------------------------------------------
+# paged layouts (vLLM-style block tables over the same typed leaves)
+# --------------------------------------------------------------------------
+
+PAGE_TRASH = 0  # pool page 0 is reserved: never allocated to a request. The
+                # engine zeroes a freed slot's block-table row, so writes for
+                # dead slots (the decode batch is fixed-width) land here and
+                # reads from it are always masked out by the length mask.
+
+
+class PagedKV(KVCache):
+    """Base for the paged cache layouts — a shared page pool + block table.
+
+    Pool leaves keep each inner layout's *kernel-major* field layout but
+    trade the per-slot token axis for ``(pages, page_size)``: a token-major
+    field ``(b, n, hkv, F)`` pools as ``(hkv, pages, page_size, F)`` (heads
+    leading so a Pallas BlockSpec can fetch one ``(page_size, F)`` tile per
+    grid step), the feature-major image ``(b, hkv, d, n)`` pools as
+    ``(hkv, pages, d, page_size)``, and headless MLA fields ``(b, n, F)``
+    as ``(pages, page_size, F)``.
+
+    ``block_table`` is ``(slots, max_pages) int32`` pool-page ids, carried
+    *inside* the pytree (replicated per layer when stacked) so the jitted
+    decode/chunk step functions keep their signatures — the engine swaps the
+    leaf when it allocates or frees pages. Logical page ``j`` of a slot
+    holds tokens ``[j·page, (j+1)·page)``, so the paged Pallas kernels visit
+    pages in the same order (and with the same tile width) as the contiguous
+    kernels visit ``block_n`` tiles: the online-softmax accumulation is
+    bit-identical given the same cache content.
+
+    ``write`` lands one decoded token per block-table row (ragged
+    positions), ``write_chunk`` lands a chunk of prefill tokens for one
+    slot, ``insert_pages`` lands a whole layer-stacked batch-1 prefill
+    cache into a slot's allocated pages, and ``gather``/``gather_slot``
+    materialize the contiguous inner-layout view the XLA oracle consumes.
+    """
+
+    # ---- coordinates ---------------------------------------------------
+    def _decode_coords(self, pos):
+        """Per-row (pool page id, in-page offset) for a (slots,) position
+        vector. Positions past the table resolve to the trash page
+        explicitly — the engine parks non-live slots at a past-the-table
+        sentinel so their fixed-width decode writes can never land in pages
+        another request holds."""
+        page = self.page_size
+        mp = self.block_table.shape[-1]
+        pidx = jnp.clip(pos // page, 0, mp - 1)
+        pids = jnp.take_along_axis(self.block_table, pidx[:, None], axis=1)
+        pids = jnp.where(pos >= page * mp, PAGE_TRASH, pids[:, 0])
+        return pids, pos % page
+
+    def _chunk_coords(self, slot, start, count: int):
+        """(pool page ids, offsets) for ``count`` consecutive tokens of one
+        slot starting at ``start`` (both traced scalars)."""
+        page = self.page_size
+        mp = self.block_table.shape[-1]
+        pos = start + jnp.arange(count)
+        row = jax.lax.dynamic_index_in_dim(self.block_table, slot, 0,
+                                           keepdims=False)
+        pidx = jnp.clip(pos // page, 0, mp - 1)
+        return row[pidx], pos % page
+
+    def _slot_table(self, slot):
+        """(1, max_pages) block-table view of one slot (traced index)."""
+        return jax.lax.dynamic_slice_in_dim(self.block_table, slot, 1, axis=0)
+
+    # ---- pooled-leaf helpers (token-major (hkv, P, page, F) fields) ----
+    @staticmethod
+    def _scatter_tok(leaf, pids, offs, val):
+        """Scatter T tokens ``val (T, hkv, F)`` at (pids, offs) of a pooled
+        token-major leaf (adjacent advanced indices keep their position, so
+        the update block is (hkv, T, F))."""
+        return leaf.at[:, pids, offs].set(
+            jnp.moveaxis(val, 0, 1).astype(leaf.dtype))
+
+    @staticmethod
+    def _gather_tok(leaf, bt):
+        """(hkv, P, page, F) pooled leaf -> (s, n, hkv, F) contiguous
+        token-major view for the block tables ``bt (s, mp)``."""
+        g = leaf[:, bt]                          # (hkv, s, mp, page, F)
+        hkv, s, mp, page = g.shape[:4]
+        g = g.reshape((hkv, s, mp * page) + g.shape[4:])
+        return jnp.moveaxis(g, 0, 2)
+
+    @staticmethod
+    def _insert_tok(dst, src, pids, page: int):
+        """Land a stacked token-major prefill leaf ``src (L, 1, n, hkv, F)``
+        into whole pages ``pids (npg,)`` of the stacked pool
+        ``dst (L, hkv, P, page, F)`` (zero-padded final partial page)."""
+        L, _, n, hkv = src.shape[:4]
+        npg = pids.shape[0]
+        pad = npg * page - n
+        if pad:
+            width = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (src.ndim - 3)
+            src = jnp.pad(src, width)
+        s = src[:, 0].reshape((L, npg, page, hkv) + src.shape[4:])
+        s = jnp.moveaxis(s, 3, 1)                # (L, hkv, npg, page, F)
+        return dst.at[:, :, pids].set(s.astype(dst.dtype))
+
+    # ---- pooled-leaf helpers (headless (P, page, F) MLA fields) --------
+    @staticmethod
+    def _scatter_flat(leaf, pids, offs, val):
+        return leaf.at[pids, offs].set(val.astype(leaf.dtype))
+
+    @staticmethod
+    def _gather_flat(leaf, bt):
+        g = leaf[bt]                             # (s, mp, page, F)
+        s, mp, page = g.shape[:3]
+        return g.reshape((s, mp * page) + g.shape[3:])
+
+    @staticmethod
+    def _insert_flat(dst, src, pids, page: int):
+        """src (L, 1, n, F) -> whole pages of dst (L, P, page, F)."""
+        L, _, n = src.shape[:3]
+        npg = pids.shape[0]
+        pad = npg * page - n
+        if pad:
+            width = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (src.ndim - 3)
+            src = jnp.pad(src, width)
+        s = src[:, 0].reshape((L, npg, page) + src.shape[3:])
+        return dst.at[:, pids].set(s.astype(dst.dtype))
+
+    # ---- interface -----------------------------------------------------
+    def write_chunk(self, slot, start, **updates) -> "PagedKV":
+        raise NotImplementedError(type(self).__name__)
+
+    def gather(self) -> KVCache:
+        """Contiguous inner-layout view of every slot (XLA oracle input)."""
+        raise NotImplementedError(type(self).__name__)
+
+    def gather_slot(self, slot) -> KVCache:
+        """Batch-1 contiguous view of one slot (chunked-prefill scoring)."""
+        raise NotImplementedError(type(self).__name__)
+
+    def insert_pages(self, src: KVCache, page_ids) -> "PagedKV":
+        """Land a layer-stacked batch-1 prefill cache (inner layout) into
+        the allocated pages ``page_ids`` of the stacked pool leaves."""
+        raise NotImplementedError(type(self).__name__)
+
+    def insert_slot(self, src, *, slot, max_len):
+        raise NotImplementedError(
+            "paged caches land prompts with insert_pages, not insert_slot")
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PagedDenseKV(PagedKV):
+    """Paged dense cache: k/v pools are (hkv, pages, page_size, head_dim)."""
+    k: jax.Array
+    v: jax.Array
+    block_table: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-2]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[-3]
+
+    def write(self, pos, *, k, v, **_ignored) -> "PagedDenseKV":
+        pids, offs = self._decode_coords(pos)
+        return dataclasses.replace(
+            self,
+            k=self._scatter_tok(self.k, pids, offs, k[:, 0]),
+            v=self._scatter_tok(self.v, pids, offs, v[:, 0]))
+
+    def write_chunk(self, slot, start, *, k, v, **_ignored) -> "PagedDenseKV":
+        pids, offs = self._chunk_coords(slot, start, k.shape[1])
+        return dataclasses.replace(
+            self,
+            k=self._scatter_tok(self.k, pids, offs, k[0]),
+            v=self._scatter_tok(self.v, pids, offs, v[0]))
+
+    def _view(self, bt):
+        return DenseKV(k=self._gather_tok(self.k, bt),
+                       v=self._gather_tok(self.v, bt))
+
+    def gather(self) -> DenseKV:
+        return self._view(self.block_table)
+
+    def gather_slot(self, slot) -> DenseKV:
+        return self._view(self._slot_table(slot))
+
+    def insert_pages(self, src: DenseKV, page_ids) -> "PagedDenseKV":
+        page = self.k.shape[-2]
+        return dataclasses.replace(
+            self,
+            k=self._insert_tok(self.k, src.k, page_ids, page),
+            v=self._insert_tok(self.v, src.v, page_ids, page))
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PagedSparseKV(PagedKV):
+    """Paged SFA cache: token-major pools, indices packed at rest.
+
+    k_vals/k_idx (hkv, pages, page_size, k); v (hkv, pages, page_size, dv);
+    k_protect (hkv, pages, page_size, p) or None.
+    """
+    k_vals: jax.Array
+    k_idx: jax.Array
+    v: jax.Array
+    block_table: jax.Array
+    k_protect: Optional[jax.Array] = None
+
+    @property
+    def page_size(self) -> int:
+        return self.v.shape[-2]
+
+    @property
+    def num_pages(self) -> int:
+        return self.v.shape[-3]
+
+    def _updates(self, pids, offs, k_vals, k_idx, v, k_protect):
+        changes = dict(
+            k_vals=self._scatter_tok(self.k_vals, pids, offs, k_vals),
+            k_idx=self._scatter_tok(self.k_idx, pids, offs, k_idx),
+            v=self._scatter_tok(self.v, pids, offs, v))
+        if self.k_protect is not None and k_protect is not None:
+            changes["k_protect"] = self._scatter_tok(self.k_protect, pids,
+                                                     offs, k_protect)
+        return dataclasses.replace(self, **changes)
+
+    def write(self, pos, *, k_vals, k_idx, v, k_protect=None,
+              **_ignored) -> "PagedSparseKV":
+        pids, offs = self._decode_coords(pos)
+        return self._updates(pids, offs, k_vals[:, 0], k_idx[:, 0], v[:, 0],
+                             None if k_protect is None else k_protect[:, 0])
+
+    def write_chunk(self, slot, start, *, k_vals, k_idx, v, k_protect=None,
+                    **_ignored) -> "PagedSparseKV":
+        pids, offs = self._chunk_coords(slot, start, k_vals.shape[1])
+        return self._updates(pids, offs, k_vals[0], k_idx[0], v[0],
+                             None if k_protect is None else k_protect[0])
+
+    def _view(self, bt):
+        return SparseKV(
+            k_vals=self._gather_tok(self.k_vals, bt),
+            k_idx=self._gather_tok(self.k_idx, bt),
+            v=self._gather_tok(self.v, bt),
+            k_protect=(None if self.k_protect is None
+                       else self._gather_tok(self.k_protect, bt)))
+
+    def gather(self) -> SparseKV:
+        return self._view(self.block_table)
+
+    def gather_slot(self, slot) -> SparseKV:
+        return self._view(self._slot_table(slot))
+
+    def insert_pages(self, src: SparseKV, page_ids) -> "PagedSparseKV":
+        page = self.v.shape[-2]
+        changes = dict(
+            k_vals=self._insert_tok(self.k_vals, src.k_vals, page_ids, page),
+            k_idx=self._insert_tok(self.k_idx, src.k_idx, page_ids, page),
+            v=self._insert_tok(self.v, src.v, page_ids, page))
+        if self.k_protect is not None and src.k_protect is not None:
+            changes["k_protect"] = self._insert_tok(self.k_protect,
+                                                    src.k_protect, page_ids,
+                                                    page)
+        return dataclasses.replace(self, **changes)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PagedFeatureMajorKV(PagedKV):
+    """Paged persistent feature-major image (``pallas_fm`` serving layout).
+
+    k_feat (hkv, pages, d, page_size)  — each pool page is a (d, page) tile
+                                         of the image, exactly the
+                                         (feature row × token tile) block
+                                         the fm kernel streams
+    v      (hkv, pages, page_size, dv) — kernel-native token-major values
+    """
+    k_feat: jax.Array
+    v: jax.Array
+    block_table: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k_feat.shape[-1]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_feat.shape[-3]
+
+    def write(self, pos, *, k_vals, k_idx, v=None,
+              **_ignored) -> "PagedFeatureMajorKV":
+        pids, offs = self._decode_coords(pos)
+        col = densify(SparseCode(values=k_vals[:, 0],
+                                 indices=unpack_indices(k_idx[:, 0]),
+                                 dim=self.k_feat.shape[-2]))  # (b, hkv, d)
+        # k_feat's advanced indices are separated by the feature axis, so
+        # the update block's batch dims move to the front: (b, hkv, d)
+        kf = self.k_feat.at[:, pids, :, offs].set(col.astype(self.k_feat.dtype))
+        return dataclasses.replace(
+            self, k_feat=kf,
+            v=self.v if v is None else self._scatter_tok(self.v, pids, offs,
+                                                         v[:, 0]))
+
+    def write_chunk(self, slot, start, *, k_vals, k_idx, v,
+                    **_ignored) -> "PagedFeatureMajorKV":
+        pids, offs = self._chunk_coords(slot, start, k_vals.shape[1])
+        col = densify(SparseCode(values=k_vals[0],
+                                 indices=unpack_indices(k_idx[0]),
+                                 dim=self.k_feat.shape[-2]))  # (C, hkv, d)
+        kf = self.k_feat.at[:, pids, :, offs].set(col.astype(self.k_feat.dtype))
+        return dataclasses.replace(
+            self, k_feat=kf, v=self._scatter_tok(self.v, pids, offs, v[0]))
+
+    def _view(self, bt):
+        g = self.k_feat[:, bt]                   # (hkv, s, mp, d, page)
+        hkv, s, mp, d, page = g.shape
+        kf = g.transpose(1, 0, 3, 2, 4).reshape(s, hkv, d, mp * page)
+        gv = self.v[:, bt]                       # (hkv, s, mp, page, dv)
+        v = gv.transpose(1, 0, 2, 3, 4).reshape(s, hkv, mp * page, gv.shape[-1])
+        return FeatureMajorKV(k_feat=kf, v=v)
+
+    def gather(self) -> FeatureMajorKV:
+        return self._view(self.block_table)
+
+    def gather_slot(self, slot) -> FeatureMajorKV:
+        return self._view(self._slot_table(slot))
+
+    def insert_pages(self, src: FeatureMajorKV,
+                     page_ids) -> "PagedFeatureMajorKV":
+        page = self.k_feat.shape[-1]
+        npg = page_ids.shape[0]
+        kf = src.k_feat                          # (L, 1, hkv, d, n)
+        L, _, hkv, d, n = kf.shape
+        pad = npg * page - n
+        if pad:
+            kf = jnp.pad(kf, [(0, 0)] * 4 + [(0, pad)])
+        kf = kf[:, 0].reshape(L, hkv, d, npg, page)
+        kf = jnp.moveaxis(kf, 3, 2)              # (L, hkv, npg, d, page)
+        vv = src.v                               # (L, 1, hkv, n, dv)
+        if pad:
+            vv = jnp.pad(vv, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+        vv = vv[:, 0].reshape(L, hkv, npg, page, vv.shape[-1])
+        return dataclasses.replace(
+            self,
+            k_feat=self.k_feat.at[:, :, page_ids].set(
+                kf.astype(self.k_feat.dtype)),
+            v=self.v.at[:, :, page_ids].set(vv.astype(self.v.dtype)))
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PagedMLAKV(PagedKV):
+    """Paged MLA latent cache: headless (pages, page_size, F) pools."""
+    ckv: jax.Array
+    kpe: jax.Array
+    block_table: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.ckv.shape[-2]
+
+    @property
+    def num_pages(self) -> int:
+        return self.ckv.shape[-3]
+
+    def write(self, pos, *, ckv, kpe, **_ignored) -> "PagedMLAKV":
+        pids, offs = self._decode_coords(pos)
+        return dataclasses.replace(
+            self,
+            ckv=self._scatter_flat(self.ckv, pids, offs, ckv[:, 0]),
+            kpe=self._scatter_flat(self.kpe, pids, offs, kpe[:, 0]))
+
+    def gather(self) -> MLAKV:
+        bt = self.block_table
+        return MLAKV(ckv=self._gather_flat(self.ckv, bt),
+                     kpe=self._gather_flat(self.kpe, bt))
+
+    def insert_pages(self, src: MLAKV, page_ids) -> "PagedMLAKV":
+        page = self.ckv.shape[-2]
+        return dataclasses.replace(
+            self,
+            ckv=self._insert_flat(self.ckv, src.ckv, page_ids, page),
+            kpe=self._insert_flat(self.kpe, src.kpe, page_ids, page))
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PagedMLASparseKV(PagedKV):
+    """Paged MLA + SFA: the packed sparse latent pools alongside the dense
+    latent (same headless page layout, indices packed at rest)."""
+    ckv: jax.Array
+    kpe: jax.Array
+    ckv_sp_vals: jax.Array
+    ckv_sp_idx: jax.Array
+    block_table: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.ckv.shape[-2]
+
+    @property
+    def num_pages(self) -> int:
+        return self.ckv.shape[-3]
+
+    def write(self, pos, *, ckv, kpe, ckv_sp_vals=None, ckv_sp_idx=None,
+              **_ignored) -> "PagedMLASparseKV":
+        pids, offs = self._decode_coords(pos)
+        changes = dict(
+            ckv=self._scatter_flat(self.ckv, pids, offs, ckv[:, 0]),
+            kpe=self._scatter_flat(self.kpe, pids, offs, kpe[:, 0]))
+        if ckv_sp_vals is not None:
+            changes["ckv_sp_vals"] = self._scatter_flat(
+                self.ckv_sp_vals, pids, offs, ckv_sp_vals[:, 0])
+            changes["ckv_sp_idx"] = self._scatter_flat(
+                self.ckv_sp_idx, pids, offs, ckv_sp_idx[:, 0])
+        return dataclasses.replace(self, **changes)
+
+    def gather(self) -> MLASparseKV:
+        bt = self.block_table
+        return MLASparseKV(
+            ckv=self._gather_flat(self.ckv, bt),
+            kpe=self._gather_flat(self.kpe, bt),
+            ckv_sp_vals=self._gather_flat(self.ckv_sp_vals, bt),
+            ckv_sp_idx=self._gather_flat(self.ckv_sp_idx, bt))
+
+    def insert_pages(self, src: MLASparseKV, page_ids) -> "PagedMLASparseKV":
+        page = self.ckv.shape[-2]
+        return dataclasses.replace(
+            self,
+            ckv=self._insert_flat(self.ckv, src.ckv, page_ids, page),
+            kpe=self._insert_flat(self.kpe, src.kpe, page_ids, page),
+            ckv_sp_vals=self._insert_flat(self.ckv_sp_vals, src.ckv_sp_vals,
+                                          page_ids, page),
+            ckv_sp_idx=self._insert_flat(self.ckv_sp_idx, src.ckv_sp_idx,
+                                         page_ids, page))
 
 
 def kv_cache_nodes(tree) -> list:

@@ -22,6 +22,18 @@ Two KV-cache layouts (DESIGN.md §2):
 Both kernels mask by a runtime ``length`` (scalar-prefetched), support
 pre-allocated over-length caches, and use online softmax across sequential
 cache tiles.
+
+Each layout also has a *paged* variant (``flash_sfa_decode_paged`` /
+``flash_sfa_decode_fm_paged``) reading the shared page pools of the
+``PagedKV`` caches: the block table is scalar-prefetched alongside the
+lengths, and the BlockSpec index maps fetch pool page ``bt[slot, n]`` for
+grid step ``n`` — block-table indirection costs zero extra HBM traffic.
+The page size IS the kernel tile (``block_n``), and a slot's logical pages
+are visited in token order, so the online-softmax accumulation is
+bit-identical to the contiguous kernels given the same cache content
+(DESIGN.md §5). Unlike the contiguous token-major path, the paged kernel
+reads KV straight from the hkv-head pool via its index maps — no per-step
+GQA head-repeat or unpack copy of the whole cache is ever materialized.
 """
 from __future__ import annotations
 
@@ -135,6 +147,108 @@ def flash_sfa_decode(q, k_vals, k_idx, v, lengths, *, d: int,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(lengths, jnp.int32), q, k_vals, k_idx, v)
+    return out
+
+
+def _decode_paged_kernel(bt_ref, len_ref, q_ref, kv_ref, ki_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, d: int, scale: float,
+                         page: int, heads: int):
+    b = pl.program_id(0)              # slot * heads + query head
+    nb = pl.program_id(1)             # logical page within the slot
+    nnb = pl.num_programs(1)
+    length = len_ref[b // heads]
+
+    @pl.when(nb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(nb * page < length)
+    def _compute():
+        # kv/ki blocks are pool page bt[slot, nb] (index-map fetched);
+        # indices are stored packed — unpack in VMEM, not the whole pool
+        kd = _densify_block(kv_ref[0, 0], ki_ref[0, 0].astype(jnp.int32), d)
+        q = q_ref[...].astype(jnp.float32)                   # (1, d)
+        s = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (1, page)
+        pos = nb * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[0, 0] * corr + p.sum()
+        vb = v_ref[0, 0].astype(jnp.float32)                 # (page, dv)
+        pv = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.full_like(m_ref, m_new)
+        l_ref[...] = jnp.full_like(l_ref, l_new)
+
+    @pl.when(nb == nnb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "scale", "heads",
+                                             "interpret"))
+def flash_sfa_decode_paged(q, kv_pool, ki_pool, v_pool, block_tables,
+                           lengths, *, d: int, scale: float | None = None,
+                           heads: int = 1, interpret: bool = True):
+    """Token-major sparse-cache decode over a paged pool.
+
+    q: (slots*heads, d) dense query; kv_pool/ki_pool: (hkv, P, page, k)
+    (indices packed at rest — unpacked per tile in VMEM); v_pool:
+    (hkv, P, page, dv); block_tables: (slots, max_pages) int32;
+    lengths: (slots,) incl. the just-written token. -> (slots*heads, dv) f32
+    (accumulator dtype, so bf16-at-rest pools keep oracle precision with no
+    whole-pool upcast). GQA is served by the ``(b % heads) // group`` index
+    maps — the head repeat the contiguous path materializes never exists.
+    """
+    bh = q.shape[0]
+    hkv, _, page, kk = kv_pool.shape
+    dv = v_pool.shape[-1]
+    group = heads // hkv
+    mp = block_tables.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    grid = (bh, mp)
+    out = pl.pallas_call(
+        functools.partial(_decode_paged_kernel, d=d, scale=scale, page=page,
+                          heads=heads),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda b, n, bt, L: (b, 0)),
+                # block-table indirection: grid step n streams pool page
+                # bt[slot, n] of the slot's kv head — same tile, same order
+                # as the contiguous kernel's (b, n) block
+                pl.BlockSpec((1, 1, page, kk),
+                             lambda b, n, bt, L: ((b % heads) // group,
+                                                  bt[b // heads, n], 0, 0)),
+                pl.BlockSpec((1, 1, page, kk),
+                             lambda b, n, bt, L: ((b % heads) // group,
+                                                  bt[b // heads, n], 0, 0)),
+                pl.BlockSpec((1, 1, page, dv),
+                             lambda b, n, bt, L: ((b % heads) // group,
+                                                  bt[b // heads, n], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dv), lambda b, n, bt, L: (b, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q, kv_pool, ki_pool, v_pool)
     return out
 
 
@@ -265,4 +379,109 @@ def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
         interpret=interpret,
     )(jnp.asarray(q_idx, jnp.int32), jnp.asarray(lengths, jnp.int32),
       q_vals, k_feat, v)
+    return out
+
+
+def _decode_fm_paged_kernel(qi_ref, bt_ref, len_ref, qv_ref, kf_ref, v_ref,
+                            o_ref, s_ref, m_ref, l_ref, acc_ref, *,
+                            scale: float, page: int, kq: int, heads: int):
+    b = pl.program_id(0)
+    nb = pl.program_id(1)
+    t = pl.program_id(2)
+    nnb = pl.num_programs(1)
+    length = len_ref[b // heads]
+
+    @pl.when((nb == 0) & (t == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t == 0)
+    def _clear_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    @pl.when(nb * page < length)
+    def _accumulate():
+        # kf block is feature row qi[b, t] of pool page bt[slot, nb]:
+        # shape (1, 1, 1, page)
+        s_ref[...] = s_ref[...] + qv_ref[0, t].astype(jnp.float32) * \
+            kf_ref[0, 0, 0].astype(jnp.float32)[None, :]
+
+    @pl.when((t == kq - 1) & (nb * page < length))
+    def _softmax_update():
+        s = s_ref[...] * scale                                # (1, page)
+        pos = nb * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[0, 0] * corr + p.sum()
+        vb = v_ref[0, 0].astype(jnp.float32)                  # (page, dv)
+        pv = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.full_like(m_ref, m_new)
+        l_ref[...] = jnp.full_like(l_ref, l_new)
+
+    @pl.when((nb == nnb - 1) & (t == kq - 1))
+    def _finalize():
+        o_ref[...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "heads", "interpret"))
+def flash_sfa_decode_fm_paged(q_vals, q_idx, kf_pool, v_pool, block_tables,
+                              lengths, *, scale: float | None = None,
+                              heads: int = 1, interpret: bool = True):
+    """Feature-major decode over a paged image pool.
+
+    q_vals/q_idx: (slots*heads, k); kf_pool: (hkv, P, d, page) — each pool
+    page is a (d, page) tile of the persistent image; v_pool:
+    (hkv, P, page, dv); block_tables: (slots, max_pages); lengths: (slots,).
+    -> (slots*heads, dv) f32. Two levels of index-map indirection compose:
+    the scalar-prefetched block table picks the pool page, the
+    scalar-prefetched q-indices pick the k feature rows inside it — still
+    only O(n·k) image bytes leave HBM.
+    """
+    bh, kq = q_vals.shape
+    hkv, _, d, page = kf_pool.shape
+    dv = v_pool.shape[-1]
+    group = heads // hkv
+    mp = block_tables.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    grid = (bh, mp, kq)
+    out = pl.pallas_call(
+        functools.partial(_decode_fm_paged_kernel, scale=scale, page=page,
+                          kq=kq, heads=heads),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, kq), lambda b, n, t, qi, bt, L: (b, 0)),
+                pl.BlockSpec((1, 1, 1, page),
+                             lambda b, n, t, qi, bt, L: (
+                                 (b % heads) // group,
+                                 bt[b // heads, n], qi[b, t], 0)),
+                pl.BlockSpec((1, 1, page, dv),
+                             lambda b, n, t, qi, bt, L: (
+                                 (b % heads) // group,
+                                 bt[b // heads, n], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dv),
+                                   lambda b, n, t, qi, bt, L: (b, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, page), jnp.float32),
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(q_idx, jnp.int32), jnp.asarray(block_tables, jnp.int32),
+      jnp.asarray(lengths, jnp.int32), q_vals, kf_pool, v_pool)
     return out

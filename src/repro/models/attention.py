@@ -8,6 +8,10 @@ Three call modes share parameters:
   * ``mode="decode"``  — one new token against the cache; SFA scoring reads
                          the cache *sparsely* (O(nk) gathered bytes — the IO
                          pattern the roofline measures).
+  * ``mode="chunk"``   — chunked prefill for the paged serving engine: a
+                         chunk of one slot's prompt lands via ``write_chunk``
+                         and is scored as vmapped single-token oracle
+                         decodes at per-query prefix lengths (DESIGN.md §5).
 
 Execution backends are resolved through the typed registry
 (``repro.models.backends``): ``cfg.attention.backend`` selects the
@@ -40,8 +44,9 @@ import numpy as np
 from repro.configs.base import AttentionConfig, ModelConfig
 from repro.core.attention import chunked_attention
 from repro.core.kv_cache import (
-    DenseKV, FeatureMajorKV, KVCache, MLAKV, MLASparseKV, SparseKV,
-    idx_dtype, pack_indices,
+    DenseKV, FeatureMajorKV, KVCache, MLAKV, MLASparseKV, PagedDenseKV,
+    PagedFeatureMajorKV, PagedKV, PagedMLAKV, PagedMLASparseKV, PagedSparseKV,
+    SparseKV, idx_dtype, pack_indices,
 )
 from repro.core.sparse import topk_st, sparsify, SparseCode
 from repro.distributed.sharding import axis_size, constrain
@@ -52,7 +57,8 @@ from repro.kernels.ops import (
     _ON_TPU, _sfa_pallas_fwd, fold_heads,
 )
 from repro.models.backends import (
-    AttentionRequest, DecodeQuery, expand_kv as _expand_kv, select_backend,
+    AttentionRequest, DecodeQuery, expand_kv as _expand_kv, get_backend,
+    select_backend,
 )
 from repro.models.layers import (
     dense, dense_init, norm_init, apply_norm, rope, rope_code_vjp,
@@ -133,7 +139,8 @@ def _sfa_code(x, a: AttentionConfig) -> SparseCode:
     return sparsify(x[..., p:], a.sfa_k)
 
 
-def _request(a: AttentionConfig, *, mode: str, window) -> AttentionRequest:
+def _request(a: AttentionConfig, *, mode: str, window,
+             paged: bool = False) -> AttentionRequest:
     """Static backend request for this layer (trace-time selection)."""
     return AttentionRequest(
         mode=mode,
@@ -142,6 +149,7 @@ def _request(a: AttentionConfig, *, mode: str, window) -> AttentionRequest:
         rope_protect=a.sfa_k is not None and a.sfa_rope_protect > 0,
         mla=a.mla is not None,
         sparse=a.sfa_k is not None,
+        paged=paged,
     )
 
 
@@ -412,6 +420,54 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                    v=jnp.zeros((batch, max_len, hkv, hd), dtype))
 
 
+def init_paged_cache(cfg: ModelConfig, *, slots: int, num_pages: int,
+                     page_size: int, max_pages: int,
+                     dtype=jnp.bfloat16) -> PagedKV:
+    """Per-layer paged decode cache: shared page pool + zeroed block table.
+
+    ``num_pages`` includes the reserved trash page 0 (DESIGN.md §5); the
+    engine allocates pages 1.. on demand and swaps the ``block_table`` leaf
+    as slots grow. The layout mirrors ``init_cache``: the selected decode
+    backend's ``persistent_cache`` capability picks the feature-major image.
+    """
+    a = cfg.attention
+    bt = jnp.zeros((slots, max_pages), jnp.int32)
+    if a.mla is not None:
+        m = a.mla
+        ckv = jnp.zeros((num_pages, page_size, m.kv_lora_rank), dtype)
+        kpe = jnp.zeros((num_pages, page_size, m.rope_head_dim), dtype)
+        if a.sfa_k is not None:
+            kk = min(a.sfa_k, m.kv_lora_rank)
+            return PagedMLASparseKV(
+                ckv=ckv, kpe=kpe,
+                ckv_sp_vals=jnp.zeros((num_pages, page_size, kk), dtype),
+                ckv_sp_idx=jnp.zeros((num_pages, page_size, kk),
+                                     idx_dtype(m.kv_lora_rank)),
+                block_table=bt)
+        return PagedMLAKV(ckv=ckv, kpe=kpe, block_table=bt)
+    hkv, hd = a.num_kv_heads, a.head_dim
+    if a.sfa_k is not None:
+        if _decode_uses_persistent_cache(cfg):
+            return PagedFeatureMajorKV(
+                k_feat=jnp.zeros((hkv, num_pages, hd, page_size), dtype),
+                v=jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+                block_table=bt)
+        p = a.sfa_rope_protect
+        kk = min(a.sfa_k, hd - p)
+        return PagedSparseKV(
+            k_vals=jnp.zeros((hkv, num_pages, page_size, kk), dtype),
+            k_idx=jnp.zeros((hkv, num_pages, page_size, kk),
+                            idx_dtype(hd - p)),
+            v=jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+            k_protect=(jnp.zeros((hkv, num_pages, page_size, p), dtype)
+                       if p else None),
+            block_table=bt)
+    return PagedDenseKV(
+        k=jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+        v=jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+        block_table=bt)
+
+
 # --------------------------------------------------------------------------
 # apply
 # --------------------------------------------------------------------------
@@ -424,8 +480,12 @@ class AttentionOut(NamedTuple):
 
 def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
                     window=None, mode: str = "train", cache=None,
-                    cache_len=None) -> AttentionOut:
+                    cache_len=None, slot=None) -> AttentionOut:
     a = cfg.attention
+    if mode == "chunk" and a is not None and a.mla is not None:
+        raise NotImplementedError(
+            "chunked prefill does not cover MLA caches — serve MLA configs "
+            "through whole-prompt prefill (insert_pages)")
     wants_seam = (mode == "train" and a is not None and a.sfa_k is not None
                   and a.bwd_emit in ("compact", "compact2"))
     if a.mla is not None:
@@ -491,12 +551,41 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
         else:
             cache = cache.write(cache_len, k=k, v=v)
         sel = select_backend(a.decode_backend,
-                             _request(a, mode="decode", window=window),
+                             _request(a, mode="decode", window=window,
+                                      paged=isinstance(cache, PagedKV)),
                              where=f"{cfg.name}/attention")
         ctx = sel.backend.decode(DecodeQuery(q=q), cache, cache_len,
                                  scale=scale, window=window, sfa_k=a.sfa_k,
                                  rope_protect=a.sfa_rope_protect)
         o = ctx.astype(dt).reshape(b, 1, h * hd)
+        return AttentionOut(dense(params["w_o"], o, dt), cache)
+
+    if mode == "chunk":
+        # chunked prefill: land C prompt tokens of one slot into the paged
+        # cache, then score each chunk query as a single-token oracle decode
+        # at its own prefix length (query i sees cache_len + i + 1 tokens) —
+        # exact reuse of the decode math, so chunk boundaries never change
+        # which tokens are visible. Prefill-side compute, oracle by design.
+        assert cache is not None and cache_len is not None and slot is not None
+        if a.sfa_k is not None:
+            p = a.sfa_rope_protect
+            kc = _sfa_code(k, a)                      # (b, C, hkv, k)
+            cache = cache.write_chunk(slot, cache_len, k_vals=kc.values,
+                                      k_idx=kc.indices, v=v,
+                                      k_protect=k[..., :p] if p else None)
+        else:
+            cache = cache.write_chunk(slot, cache_len, k=k, v=v)
+        g = cache.gather_slot(slot)                   # batch-1 contiguous
+        oracle = get_backend("xla")
+        lens = cache_len + jnp.arange(n)              # (C,)
+
+        def one(qi, li):
+            return oracle.decode(DecodeQuery(q=qi[None, None]), g, li[None],
+                                 scale=scale, window=window, sfa_k=a.sfa_k,
+                                 rope_protect=a.sfa_rope_protect)[0]
+
+        ctx = jax.vmap(one)(q[0], lens)               # (C, h, dv)
+        o = ctx.astype(dt).reshape(1, n, h * hd)
         return AttentionOut(dense(params["w_o"], o, dt), cache)
 
     # train / prefill: full-sequence attention (heads padded to TP degree).

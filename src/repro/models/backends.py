@@ -52,10 +52,14 @@ import numpy as np
 
 from repro.core.attention import chunked_attention, NEG_INF
 from repro.core.kv_cache import (
-    FeatureMajorKV, KVCache, MLAKV, MLASparseKV, SparseKV, unpack_indices,
+    FeatureMajorKV, KVCache, MLAKV, MLASparseKV, PagedFeatureMajorKV,
+    PagedKV, PagedSparseKV, SparseKV, unpack_indices,
 )
 from repro.core.sparse import sparsify, to_feature_major, topk_st
-from repro.kernels.flash_sfa_decode import flash_sfa_decode, flash_sfa_decode_fm
+from repro.kernels.flash_sfa_decode import (
+    flash_sfa_decode, flash_sfa_decode_fm, flash_sfa_decode_fm_paged,
+    flash_sfa_decode_paged,
+)
 from repro.kernels.ops import dense_attention_op, sfa_attention_op
 
 _LOG = logging.getLogger(__name__)
@@ -75,6 +79,7 @@ class AttentionRequest:
     rope_protect: bool = False   # SFA with protected leading RoPE dims
     mla: bool = False            # latent (MLA) attention
     sparse: bool = False         # sfa_k is set
+    paged: bool = False          # cache is a paged (block-table) PagedKV
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +98,10 @@ class Capabilities:
     # (FeatureMajorKV): the cache allocator picks the cache type from the
     # selected backend — not the other way around
     persistent_cache: bool = False
+    # the backend can decode against a PagedKV block-table cache (reads
+    # indirected through the block table); backends without it fall back
+    # to the oracle with a structured report when the engine serves paged
+    paged: bool = False
 
 
 class DecodeQuery(NamedTuple):
@@ -133,6 +142,8 @@ class AttentionBackend:
             return "SFA sparse attention not supported"
         if not req.sparse and not c.dense:
             return "dense attention not supported"
+        if req.paged and not c.paged:
+            return "paged KV cache (block-table reads) not supported"
         return None
 
     # entry points ------------------------------------------------------
@@ -221,7 +232,7 @@ class XLABackend(AttentionBackend):
     caps = Capabilities(full=True, decode=True, causal=True,
                         bidirectional=True, window=True, rope_protect=True,
                         mla=True, sparse=True, dense=True,
-                        differentiable=True)
+                        differentiable=True, paged=True)
 
     def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
              window, scale, bwd_emit="dense"):
@@ -239,6 +250,11 @@ class XLABackend(AttentionBackend):
 
     def decode(self, query: DecodeQuery, cache: KVCache, lengths, *,
                scale, window, sfa_k, rope_protect):
+        if isinstance(cache, PagedKV):
+            # oracle paged path: gather the block-table view back into the
+            # contiguous layout and score as usual. O(n) extra copies — a
+            # correctness tool; the paged Pallas kernels read in place.
+            cache = cache.gather()
         if isinstance(cache, (MLAKV, MLASparseKV)):
             return self._decode_mla(query, cache, lengths, scale=scale,
                                     sfa_k=sfa_k)
@@ -328,7 +344,7 @@ class PallasBackend(AttentionBackend):
     caps = Capabilities(full=True, decode=True, causal=True,
                         bidirectional=True, window=False, rope_protect=False,
                         mla=False, sparse=True, dense=True,
-                        differentiable=True)
+                        differentiable=True, paged=True)
 
     def __init__(self, bwd: str = "pallas"):
         self._bwd = bwd
@@ -356,6 +372,16 @@ class PallasBackend(AttentionBackend):
                scale, window, sfa_k, rope_protect):
         b, _, h, d = query.q.shape
         qs = topk_st(query.q[:, 0], sfa_k)                   # (b, h, d)
+        if isinstance(cache, PagedSparseKV):
+            # paged kernel reads the shared pools in place through the
+            # block table (scalar-prefetched index maps): no per-step
+            # gather, no head repeat, and the packed uint8 indices are
+            # unpacked per-tile in VMEM
+            o = flash_sfa_decode_paged(
+                qs.reshape(b * h, d), cache.k_vals, cache.k_idx, cache.v,
+                cache.block_table, lengths + 1, d=d, scale=scale,
+                heads=h, interpret=not _ON_TPU)
+            return o.reshape(b, h, -1)
         kv = _fold_expand(cache.k_vals, h)                   # (b*h, n, k)
         ki = _fold_expand(unpack_indices(cache.k_idx), h)
         # f32 V: the kernel emits in V's dtype; keep the f32 accumulator
@@ -384,8 +410,9 @@ def set_fm_debug(enabled: bool) -> None:
     were traced with (they hold their compiled functions directly)."""
     global _FM_DEBUG
     _FM_DEBUG = bool(enabled)
-    from repro.serve.engine import _jitted_fns
+    from repro.serve.engine import _jitted_fns, _paged_jitted_fns
     _jitted_fns.cache_clear()
+    _paged_jitted_fns.cache_clear()
 
 
 def _assert_fm_image_equal(persistent, recomputed):
@@ -429,22 +456,36 @@ class PallasFMBackend(AttentionBackend):
     caps = Capabilities(full=False, decode=True, causal=True,
                         bidirectional=True, window=False, rope_protect=False,
                         mla=False, sparse=True, dense=False,
-                        differentiable=False, persistent_cache=True)
+                        differentiable=False, persistent_cache=True,
+                        paged=True)
 
     def decode(self, query: DecodeQuery, cache: FeatureMajorKV, lengths, *,
                scale, window, sfa_k, rope_protect):
-        if not isinstance(cache, FeatureMajorKV):
+        if not isinstance(cache, (FeatureMajorKV, PagedFeatureMajorKV)):
             raise TypeError(
                 f"pallas_fm serves the persistent FeatureMajorKV cache, got "
                 f"{type(cache).__name__} — allocate caches through "
                 f"init_cache/init_decode_caches so the layout follows the "
                 f"selected backend")
         b, _, h, d = query.q.shape
-        hkv, nmax = cache.k_feat.shape[1], cache.k_feat.shape[-1]
         code = sparsify(query.q[:, 0], min(sfa_k, d))        # (b, h, k)
         kq = code.values.shape[-1]
         qv = code.values.reshape(b * h, kq)
         qi = code.indices.reshape(b * h, kq)
+        if isinstance(cache, PagedFeatureMajorKV):
+            # paged persistent image: (hkv, P, d, page) pool read in place
+            # through the block table; the kernel's qi index map selects the
+            # k feature rows *per page*, so per-step traffic stays O(n·k)
+            if _FM_DEBUG:
+                g = cache.gather()                           # (s, hkv, d, n)
+                s_, hkv_, d_, n_ = g.k_feat.shape
+                _debug_check_fm_image(
+                    g.k_feat.reshape(s_ * hkv_, d_, n_), sfa_k)
+            o = flash_sfa_decode_fm_paged(
+                qv, qi, cache.k_feat, cache.v, cache.block_table,
+                lengths + 1, scale=scale, heads=h, interpret=not _ON_TPU)
+            return o.reshape(b, h, -1)
+        hkv, nmax = cache.k_feat.shape[1], cache.k_feat.shape[-1]
         # zero per-step copies: both cache leaves are stored kernel-native
         # (heads-major), so the flat (b*hkv, ...) views are reshapes, and
         # GQA is served by the kernel's i // group index maps rather than a

@@ -149,11 +149,11 @@ MOE_AUX_WEIGHT = 0.01
 
 
 def _tx_block(p, x, cfg: ModelConfig, kind: str, *, window=None, positions=None,
-              mode="train", cache=None, cache_len=None):
+              mode="train", cache=None, cache_len=None, slot=None):
     h = L.apply_norm(p["ln1"], x, cfg.norm)
     ao = attn.attention_apply(p["attn"], h, cfg=cfg, positions=positions,
                               window=window, mode=mode, cache=cache,
-                              cache_len=cache_len)
+                              cache_len=cache_len, slot=slot)
     x = x + ao.out
     h = L.apply_norm(p["ln2"], x, cfg.norm)
     if kind == "block_moe":
@@ -220,7 +220,8 @@ def _jamba_super(p, x, cfg: ModelConfig, *, positions=None, mode="train",
 # ==========================================================================
 
 def _scan_segment(seg_params, x, cfg: ModelConfig, kind: str, count: int,
-                  offset: int, *, positions, mode, caches, cache_len):
+                  offset: int, *, positions, mode, caches, cache_len,
+                  slot=None):
     """Scan one segment. caches: stacked (count, ...) pytree or None."""
     windows = _window_array(cfg, count, offset) if kind.startswith("block") else None
 
@@ -246,7 +247,7 @@ def _scan_segment(seg_params, x, cfg: ModelConfig, kind: str, count: int,
                 p, cache = xs if caches is not None else (xs, None)
             x, new_cache, aux_i = _tx_block(
                 p, x, cfg, kind, window=w, positions=positions, mode=mode,
-                cache=cache, cache_len=cache_len)
+                cache=cache, cache_len=cache_len, slot=slot)
         return (x, aux + aux_i), new_cache
 
     if cfg.remat and mode == "train":
@@ -262,7 +263,7 @@ def _scan_segment(seg_params, x, cfg: ModelConfig, kind: str, count: int,
 
 
 def _apply_stack(params, x, cfg: ModelConfig, *, positions, mode,
-                 caches=None, cache_len=None):
+                 caches=None, cache_len=None, slot=None):
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
     offset = 0
@@ -270,7 +271,8 @@ def _apply_stack(params, x, cfg: ModelConfig, *, positions, mode,
         seg_cache = caches[si] if caches is not None else None
         x, aux, nc = _scan_segment(params["segments"][si], x, cfg, kind, count,
                                    offset, positions=positions, mode=mode,
-                                   caches=seg_cache, cache_len=cache_len)
+                                   caches=seg_cache, cache_len=cache_len,
+                                   slot=slot)
         aux_total = aux_total + aux
         new_caches.append(nc)
         offset += count
@@ -377,6 +379,32 @@ def decode_step(params, token, caches, cache_len, cfg: ModelConfig):
     return logits, new_caches
 
 
+def prefill_chunk(params, tokens, caches, offset, valid, slot, cfg: ModelConfig):
+    """One chunk of a paged prefill: land ``tokens (1, C)`` of ``slot`` at
+    positions ``offset..offset+C-1`` into the paged caches and return the
+    logits at the last *valid* chunk position (``valid <= C``; trailing pad
+    tokens are written but always masked/overwritten before any read).
+
+    Chunk scoring reuses the single-token decode oracle per query (see
+    ``attention_apply`` mode="chunk"), so interleaving chunks with decode
+    steps never changes which cache prefix a query sees."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    c = tokens.shape[1]
+    h = L.embed(params["embed"], tokens, dtype) * (
+        cfg.d_model ** 0.5 if cfg.norm == "rmsnorm" else 1.0)
+    positions = offset + jnp.arange(c)[None, :]
+    if cfg.pos_embedding == "learned":
+        h = h + jnp.take(params["pos"]["w"], positions[0],
+                         axis=0).astype(dtype)[None]
+    h, _, new_caches = _apply_stack(params, h, cfg, positions=positions,
+                                    mode="chunk", caches=caches,
+                                    cache_len=offset, slot=slot)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    hv = jax.lax.dynamic_index_in_dim(h[0], valid - 1, 0, keepdims=False)
+    logits = hv.astype(jnp.float32) @ _head_weights(params, cfg).T.astype(jnp.float32)
+    return logits, new_caches
+
+
 def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
                        dtype=jnp.bfloat16):
     """Stacked (per segment) decode caches matching _apply_stack layout."""
@@ -393,5 +421,29 @@ def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
                              for _ in range(cfg.hybrid_period - 1)]}
         else:
             one = attn.init_cache(cfg, batch, max_len, dtype)
+        out.append(stack([one] * count))
+    return out
+
+
+def init_paged_decode_caches(cfg: ModelConfig, *, slots: int, num_pages: int,
+                             page_size: int, max_pages: int,
+                             dtype=jnp.bfloat16):
+    """Stacked paged decode caches (one shared pool per layer, block table
+    replicated per layer inside the pytree so the scanned step functions
+    keep their signatures — the engine swaps every replica at once)."""
+    segs = segments(cfg)
+    if any(kind in ("rwkv", "jamba") for kind, _ in segs):
+        raise NotImplementedError(
+            f"paged decode caches cover attention KV caches only; "
+            f"family={cfg.family!r} carries recurrent state")
+
+    def stack(trees):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    out = []
+    for kind, count in segs:
+        one = attn.init_paged_cache(cfg, slots=slots, num_pages=num_pages,
+                                    page_size=page_size, max_pages=max_pages,
+                                    dtype=dtype)
         out.append(stack([one] * count))
     return out

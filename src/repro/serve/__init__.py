@@ -1,11 +1,15 @@
-from repro.serve.engine import DecodeEngine, EngineConfig
+from repro.serve.engine import (
+    DecodeEngine, EngineConfig, PagedDecodeEngine, PagedEngineConfig,
+)
 from repro.serve.kv_cache import (
     cache_bytes_per_token, cache_stats, CacheStats, memory_ratio_appendix_j,
     pack_indices, unpack_indices, sparse_k_bytes, dense_k_bytes,
-    realized_cache_bytes_per_token, cache_nbytes,
+    realized_cache_bytes_per_token, cache_nbytes, paged_page_bytes,
 )
 
-__all__ = ["DecodeEngine", "EngineConfig", "cache_bytes_per_token",
+__all__ = ["DecodeEngine", "EngineConfig", "PagedDecodeEngine",
+           "PagedEngineConfig", "cache_bytes_per_token",
            "cache_stats", "CacheStats", "memory_ratio_appendix_j",
            "pack_indices", "unpack_indices", "sparse_k_bytes",
-           "dense_k_bytes", "realized_cache_bytes_per_token", "cache_nbytes"]
+           "dense_k_bytes", "realized_cache_bytes_per_token", "cache_nbytes",
+           "paged_page_bytes"]

@@ -28,7 +28,7 @@ __all__ = [
     "cache_nbytes", "idx_bytes", "pack_indices", "unpack_indices",
     "sparse_k_bytes", "dense_k_bytes", "cache_bytes_per_token",
     "realized_cache_bytes_per_token", "memory_ratio_appendix_j",
-    "CacheStats", "cache_stats",
+    "paged_page_bytes", "CacheStats", "cache_stats",
 ]
 
 
@@ -92,6 +92,24 @@ def realized_cache_bytes_per_token(cfg: ModelConfig, *, max_len: int = 128,
 
     caches = jax.eval_shape(lambda: init_decode_caches(cfg, batch, max_len))
     return cache_nbytes(caches) / (batch * max_len)
+
+
+def paged_page_bytes(cfg: ModelConfig, *, page_size: int = 128) -> int:
+    """Bytes one pool page costs across all layers of a config's paged
+    decode cache. Measured, not modelled: ``jax.eval_shape`` the paged
+    cache at ``num_pages`` 2 vs 1 and difference the totals — every
+    non-pool leaf (block tables) is identical in both, so only the
+    marginal page survives. The serving engine divides its memory budget
+    by this to size the shared pool."""
+    import jax
+
+    from repro.models import init_paged_decode_caches
+
+    def shape(p):
+        return jax.eval_shape(lambda: init_paged_decode_caches(
+            cfg, slots=1, num_pages=p, page_size=page_size, max_pages=1))
+
+    return cache_nbytes(shape(2)) - cache_nbytes(shape(1))
 
 
 def memory_ratio_appendix_j(d: int, k: int) -> float:

@@ -44,6 +44,22 @@ def test_capability_flags():
     # its decode layout resident in the cache (FeatureMajorKV)
     assert fm.caps.persistent_cache
     assert not (xla.caps.persistent_cache or pal.caps.persistent_cache)
+    # every registered decode backend currently reads block-table (paged)
+    # caches; the flag exists so a future backend without paged reads falls
+    # back with a structured report instead of mis-indexing the pool
+    assert xla.caps.paged and pal.caps.paged and fm.caps.paged
+
+
+def test_paged_request_fallback_reason():
+    """A paged decode request against a backend whose capabilities lack
+    block-table reads must produce a structured fallback, not run."""
+    req = _req(mode="decode", paged=True)
+    nopaged = type("NoPagedStub", (B.AttentionBackend,), {
+        "caps": dataclasses.replace(B.get_backend("xla").caps, paged=False)})
+    reason = nopaged().unsupported_reason(req)
+    assert reason is not None and "paged" in reason
+    assert B.get_backend("xla").unsupported_reason(req) is None
+    assert B.get_backend("pallas").unsupported_reason(req) is None
 
 
 def test_explicit_selection_and_auto_on_cpu():

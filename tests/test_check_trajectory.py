@@ -92,6 +92,60 @@ def test_missing_row_kind_fails():
     assert any("decode" in p and "missing" in p for p in probs)
 
 
+SERVE_BASE = [
+    _row("serve_mixed_slot",
+         "tok_per_step=3.909;p50_steps=6.5;p99_steps=11.0;util=0.2708;"
+         "util_peak=0.4896;steps=33;tokens=129;toks_per_s_wall=872"),
+    _row("serve_mixed_paged",
+         "tok_per_step=4.161;p50_steps=6.5;p99_steps=11.0;util=0.2883;"
+         "util_peak=0.6719;steps=31;tokens=129;toks_per_s_wall=749"),
+]
+
+
+def test_serving_rows_key_by_mix_and_engine():
+    key, fields = ct.gated_fields(
+        "serve_mixed_paged_chunked",
+        "tok_per_step=3.1;p50_steps=12.5;p99_steps=18.9;util=0.218;"
+        "util_peak=0.52;steps=41;tokens=129;toks_per_s_wall=496")
+    assert key == ("serve", "mixed", "paged_chunked")
+    assert fields["tok_per_step"] == ("higher", 3.1)
+    assert fields["p99_steps"] == ("lower", 18.9)
+    assert fields["util"] == ("higher", 0.218)
+    assert fields["util_peak"] == ("higher", 0.52)
+    # wall-clock throughput and raw counts are never gated
+    assert "toks_per_s_wall" not in fields
+    assert "steps" not in fields and "tokens" not in fields
+
+
+def test_serving_regressions_fail_both_directions():
+    ok = [_row("serve_mixed_slot",
+               "tok_per_step=3.909;p50_steps=6.5;p99_steps=11.0;"
+               "util=0.2708;util_peak=0.4896"),
+          _row("serve_mixed_paged",
+               "tok_per_step=4.23;p50_steps=6.5;p99_steps=10.0;"
+               "util=0.30;util_peak=0.70")]           # improvements pass
+    assert ct.compare(SERVE_BASE, ok, tol=0.02) == []
+    worse = [_row("serve_mixed_slot",
+                  "tok_per_step=3.909;p50_steps=6.5;p99_steps=13.0;"
+                  "util=0.2708;util_peak=0.4896"),     # p99 grew
+             _row("serve_mixed_paged",
+                  "tok_per_step=3.5;p50_steps=6.5;p99_steps=11.0;"
+                  "util=0.2883;util_peak=0.6719")]     # throughput dropped
+    probs = ct.compare(SERVE_BASE, worse, tol=0.02)
+    assert any("p99_steps regressed" in p for p in probs)
+    assert any("tok_per_step regressed" in p for p in probs)
+
+
+def test_serving_and_attention_rows_coexist():
+    """A combined row list indexes under disjoint keys (kind 'serve' vs
+    attention kinds) — one compare() call gates both grammars."""
+    both = BASE + SERVE_BASE
+    idx = ct.index_rows(both)
+    assert ("serve", "mixed", "slot") in idx
+    assert ("attn_bwd", 64, 8) in idx
+    assert ct.compare(both, both, tol=0.0) == []
+
+
 def test_gate_passes_against_committed_snapshot_schema():
     """The committed trajectory must parse and produce gated fields — the CI
     step depends on that (no kernels: snapshot-side only)."""
@@ -103,6 +157,12 @@ def test_gate_passes_against_committed_snapshot_schema():
     assert {"attn", "attn_bwd", "decode"} <= kinds
     # self-comparison is a fixed point of the gate
     assert ct.compare(rows, rows, tol=0.0) == []
+    spath = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+    srows = ct.load_baseline(spath, -1)
+    sidx = ct.index_rows(srows)
+    assert sidx and all(k[0] == "serve" for k in sidx)
+    assert {k[2] for k in sidx} >= {"slot", "paged", "paged_chunked"}
+    assert ct.compare(srows, srows, tol=0.0) == []
 
 
 def test_empty_trajectory_is_an_error(tmp_path):

@@ -72,6 +72,94 @@ def test_length_accounting_after_step(dense_setup):
     assert int(eng.lengths[sb]) == len(pb) + 1           # dead slot frozen
 
 
+def test_max_new_tokens_exact_budget(dense_setup):
+    """max_new_tokens ∈ {1, 2} produce EXACTLY that many tokens, each the
+    prefix of the longer greedy run (regression: a budget-1 request used to
+    go live with budget 0 and decode a second token past its budget)."""
+    cfg, params = dense_setup
+    p = np.array([1, 2, 3], np.int64)
+    ref = _engine(cfg, params).generate(p, max_new_tokens=4)
+    for mn in (1, 2):
+        eng = _engine(cfg, params)
+        slot = eng.add_request(p, max_new_tokens=mn)
+        if mn == 1:
+            assert not eng.live[slot]           # budget spent at prefill
+        while eng.live.any():
+            eng.step()
+        assert eng.outputs[slot] == ref[:mn]
+        # the slot is freed once the budget is exhausted — immediately
+        # reusable for the next request
+        assert eng.add_request(p, max_new_tokens=2) == slot
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        _engine(cfg, params).add_request(p, max_new_tokens=0)
+
+
+def test_overlong_prompt_rejected(dense_setup):
+    """A prompt with no free cache position left to decode into must be
+    rejected up front (regression: it used to prefill, then write the first
+    decoded token out of bounds)."""
+    cfg, params = dense_setup
+    eng = _engine(cfg, params, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.add_request(np.arange(8, dtype=np.int64))    # len == max_len
+    with pytest.raises(ValueError, match="max_len"):
+        eng.add_request(np.arange(9, dtype=np.int64))
+    # boundary: max_len-1 leaves exactly one decode position
+    slot = eng.add_request(np.arange(7, dtype=np.int64), max_new_tokens=5)
+    while eng.live.any():
+        eng.step()
+    assert len(eng.outputs[slot]) == 2          # prefill token + 1 decode
+
+
+def test_overlong_prompt_rejected_patch_frontend():
+    """The patch frontend contributes prefix_len positions to the cache:
+    over-length accounting must include them (regression: a prompt that fit
+    token-wise but not with its patch prefix was admitted)."""
+    cfg = dataclasses.replace(get_config("paligemma-3b").reduced(),
+                              dtype="float32")
+    pre = cfg.frontend.prefix_len
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(params, cfg, EngineConfig(max_slots=1,
+                                                 max_len=pre + 4))
+    patches = np.zeros((pre, cfg.frontend.input_dim), np.float32)
+    # 4 tokens + prefix_len patches == max_len: no room to decode
+    with pytest.raises(ValueError, match="patch-frontend prefix"):
+        eng.add_request(np.arange(4, dtype=np.int64), max_new_tokens=2,
+                        extra_inputs={"patches": patches})
+    # one token fewer fits, and the slot length includes the prefix
+    slot = eng.add_request(np.arange(3, dtype=np.int64), max_new_tokens=2,
+                           extra_inputs={"patches": patches})
+    assert int(eng.lengths[slot]) == pre + 3
+
+
+def test_lengths_through_evict_and_reuse(dense_setup):
+    """Slot evict/reuse stress on the length bookkeeping: only slots that
+    actually decoded get +1 (regression: every live-at-step-start slot was
+    bumped, so a slot freed mid-run drifted and poisoned page accounting),
+    and a reused slot restarts at its new prompt length."""
+    cfg, params = dense_setup
+    eng = _engine(cfg, params)
+    pa = np.array([1, 2, 3, 4], np.int64)
+    pb = np.array([5, 6, 7], np.int64)
+    sa = eng.add_request(pa, max_new_tokens=6)
+    sb = eng.add_request(pb, max_new_tokens=2)
+    eng.step()                        # both decode; sb's budget is spent
+    assert not eng.live[sb]
+    frozen = int(eng.lengths[sb])
+    assert frozen == len(pb) + 1      # its one decoded token, nothing more
+    eng.step()                        # only sa decodes
+    assert int(eng.lengths[sb]) == frozen        # dead slot must not drift
+    assert int(eng.lengths[sa]) == len(pa) + 2
+    pc = np.array([8, 9, 10], np.int64)
+    sc = eng.add_request(pc, max_new_tokens=3)
+    assert sc == sb                   # freed slot reused
+    assert int(eng.lengths[sc]) == len(pc)
+    while eng.live.any():
+        eng.step()
+    assert int(eng.lengths[sc]) == len(pc) + 2   # max_new-1 decode steps
+    assert int(eng.lengths[sa]) == len(pa) + 5
+
+
 def test_eos_termination(dense_setup):
     cfg, params = dense_setup
     ref = _engine(cfg, params).generate(np.array([1, 2, 3], np.int64),
