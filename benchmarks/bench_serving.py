@@ -14,6 +14,16 @@ lengths) is driven through three engines:
                         use and more of them run concurrently.
   * ``paged_chunked`` — same, with chunked prefill interleaved into decode
                         steps (no whole-prompt stall for running streams).
+  * ``spec``          — ``SpeculativeDecodeEngine`` (DESIGN.md §6) under the
+                        same byte budget: each tick drafts ``draft_len``
+                        tokens at the nested top-k' sub-code and verifies
+                        them in one full-k pass, so a tick can emit several
+                        tokens. Its rows add ``spec_acc_per_step`` (accepted
+                        tokens per decode tick) and ``spec_alpha`` (draft
+                        acceptance rate) — both deterministic (greedy) and
+                        gated higher-is-better; the gate additionally floors
+                        ``spec_acc_per_step`` above the same-mix paged
+                        engine's ``tok_per_step``.
 
 Reported per engine: wall-clock µs/step and tokens/s (trend-only, never
 gated) plus the deterministic scheduling metrics the CI trajectory gate
@@ -38,7 +48,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.serve import (DecodeEngine, EngineConfig, PagedDecodeEngine,
-                         PagedEngineConfig)
+                         PagedEngineConfig, SpeculativeDecodeEngine,
+                         SpeculativeEngineConfig)
 
 ARCH = "gpt2-small-sfa8"
 MAX_LEN = 48
@@ -140,9 +151,15 @@ def _engines(cfg, params):
             max_slots=PAGED_SLOTS, max_len=MAX_LEN, page_size=PAGE,
             mem_budget_bytes=budget, prefill_chunk=chunk))
 
+    def spec():
+        return SpeculativeDecodeEngine(params, cfg, SpeculativeEngineConfig(
+            max_slots=PAGED_SLOTS, max_len=MAX_LEN, page_size=PAGE,
+            mem_budget_bytes=budget, draft_len=4))
+
     return [("slot", slot, _drive_slot),
             ("paged", lambda: paged(None), _drive_paged),
-            ("paged_chunked", lambda: paged(PAGE), _drive_paged)]
+            ("paged_chunked", lambda: paged(PAGE), _drive_paged),
+            ("spec", spec, _drive_paged)]
 
 
 def run(quick: bool = True, smoke: bool = False):
@@ -158,8 +175,9 @@ def run(quick: bool = True, smoke: bool = False):
         reqs = _trace(mix)
         for name, make, drive in _engines(cfg, params):
             drive(make(), reqs)                    # warm the jit caches
+            eng = make()
             t0 = time.perf_counter()
-            steps, lat, util, tokens = drive(make(), reqs)
+            steps, lat, util, tokens = drive(eng, reqs)
             wall = time.perf_counter() - t0
             lat = np.asarray(sorted(lat))
             assert len(lat) == len(reqs), (name, mix, "requests lost")
@@ -171,6 +189,10 @@ def run(quick: bool = True, smoke: bool = False):
                 f"util_peak={float(np.max(util)):.4f};"
                 f"steps={steps};tokens={tokens};"
                 f"toks_per_s_wall={tokens / wall:.0f}")
+            if hasattr(eng, "spec_stats"):
+                s = eng.spec_stats
+                derived += (f";spec_acc_per_step={s['acc_per_step']:.3f};"
+                            f"spec_alpha={s['alpha']:.3f}")
             rows.append((f"serve_{mix}_{name}", wall / steps * 1e6, derived))
     return rows
 

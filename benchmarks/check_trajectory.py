@@ -70,12 +70,15 @@ GATES = (
 )
 
 # serving gates: wall-clock fields (*_us, toks_per_s_wall) are never
-# gated; steps/tokens counts are covered through tok_per_step.
+# gated; steps/tokens counts are covered through tok_per_step. spec_*
+# covers the speculative rows' acceptance metrics (spec_acc_per_step,
+# spec_alpha) — deterministic under greedy decode, higher is better.
 SERVE_GATES = (
     ("tok_per_step", "higher", False),
     ("p50_steps", "lower", False),
     ("p99_steps", "lower", False),
     ("util", "higher", False),
+    ("spec_", "higher", False),
 )
 
 
@@ -165,6 +168,32 @@ def compare(baseline_rows, new_rows, *, tol: float) -> list[str]:
     return problems
 
 
+def spec_floor_problems(rows) -> list[str]:
+    """Cross-row floor for the speculative engine: per traffic mix, the
+    spec row's accepted-tokens-per-decode-tick must exceed the plain paged
+    engine's tokens/step at the same byte budget — otherwise drafting burns
+    passes without ever amortizing them and the subsystem is dead weight.
+    (Wall-clock is still never gated; this compares deterministic
+    scheduling metrics only.)"""
+    idx = index_rows(rows)
+    problems = []
+    for key, fields in idx.items():
+        if key[0] != "serve" or key[2] != "spec":
+            continue
+        paged = idx.get(("serve", key[1], "paged"))
+        if paged is None or "spec_acc_per_step" not in fields:
+            continue
+        acc = fields["spec_acc_per_step"][1]
+        floor = paged["tok_per_step"][1]
+        if acc <= floor:
+            problems.append(
+                f"serve_{key[1]}_spec: spec_acc_per_step={acc:.3f} does not "
+                f"beat the non-speculative paged tok_per_step={floor:.3f} "
+                f"at the same byte budget — speculative decoding is not "
+                f"paying for its draft passes")
+    return problems
+
+
 def load_baseline(path: pathlib.Path, entry: int) -> list:
     history = json.loads(path.read_text())
     if not history:
@@ -210,6 +239,8 @@ def main() -> None:
             print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
         rows = [{"name": r[0], "derived": r[2]} for r in raw]
         problems += compare(baseline, rows, tol=args.tol)
+        if suite == "serving":
+            problems += spec_floor_problems(rows)
         gated = index_rows(rows)
         uncovered = sorted(index_rows(baseline).keys() - gated.keys())
         print(f"trajectory gate [{suite}]: {len(gated)} smoke row keys vs "

@@ -60,6 +60,11 @@ class AttentionConfig:
     # SFA-on-RoPE handling (paper A.1): keep a few leading dims dense so
     # position info survives sparsification; 0 = sparsify everything.
     sfa_rope_protect: int = 0
+    # Speculative drafting (DESIGN.md §6): decode with the top-k' sub-code
+    # of the stored top-k cache (core/sparse.py::sub_k) — same weights, same
+    # cache, overlap cost k'^2/d instead of k^2/d. None = normal decode; the
+    # speculative engine sets this on its draft-pass config only.
+    sfa_draft_k: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -198,7 +203,7 @@ def shape_by_name(name: str) -> ShapeConfig:
 
 
 def skip_reason(model: ModelConfig, shape: ShapeConfig) -> Optional[str]:
-    """Assignment skip rules (DESIGN.md §7). None = run the cell."""
+    """Assignment skip rules (DESIGN.md §8). None = run the cell."""
     if not model.causal and shape.kind == "decode":
         return "encoder-only: no autoregressive decode step"
     if shape.name == "long_500k":

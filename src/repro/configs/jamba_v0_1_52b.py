@@ -4,7 +4,7 @@ Mamba+attention 1:7 interleave, MoE 16e top-2 every other layer
 
 Layout: super-blocks of 8 layers, attention at index 4 (rest Mamba); MoE
 replaces the MLP on every second layer. SFA applies to the 4 attention
-layers; Mamba layers have no QKᵀ (DESIGN.md §6).
+layers; Mamba layers have no QKᵀ (DESIGN.md §7).
 """
 from repro.configs.base import AttentionConfig, MoEConfig, SSMConfig, ModelConfig
 

@@ -313,14 +313,19 @@ class PagedKV(KVCache):
 
     def _chunk_coords(self, slot, start, count: int):
         """(pool page ids, offsets) for ``count`` consecutive tokens of one
-        slot starting at ``start`` (both traced scalars)."""
+        slot starting at ``start`` (both traced scalars). Positions past the
+        table route to the trash page like ``_decode_coords`` — the verify
+        path writes draft lookahead past a slot's last page when it sits
+        near ``max_len``, and clamping would silently overwrite the slot's
+        own final page."""
         page = self.page_size
         mp = self.block_table.shape[-1]
         pos = start + jnp.arange(count)
         row = jax.lax.dynamic_index_in_dim(self.block_table, slot, 0,
                                            keepdims=False)
         pidx = jnp.clip(pos // page, 0, mp - 1)
-        return row[pidx], pos % page
+        pids = jnp.where(pos >= page * mp, PAGE_TRASH, row[pidx])
+        return pids, pos % page
 
     def _slot_table(self, slot):
         """(1, max_pages) block-table view of one slot (traced index)."""

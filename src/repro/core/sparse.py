@@ -97,6 +97,35 @@ def sparsify(x: jax.Array, k: int) -> SparseCode:
                       dim=d)
 
 
+def sub_k(values: jax.Array, indices: jax.Array, k_draft: int):
+    """Re-threshold a stored top-k code to its top-k' (k' < k) sub-code.
+
+    Because ``topk_mask`` selects by a global magnitude threshold with a
+    lowest-index tie-break, the top-k' entries OF the stored k entries are
+    exactly the global top-k' of the original row — the nested-k property
+    that makes low-k' speculative drafting free (no second projection, no
+    second cache; overlap cost k'^2/d instead of k^2/d, paper Eq. 3).
+
+    Extraction walks positions within the width-k code in ascending order
+    (same first-set-bit idiom as ``sparsify``), and since stored indices
+    ascend per row, the sub-code's indices ascend too — the invariant every
+    decode kernel relies on. Returns ``(values', indices') (..., k_draft)``.
+    """
+    k = values.shape[-1]
+    if k_draft >= k:
+        return values, indices
+    mask = topk_mask(values, k_draft)
+    rem = mask
+    pos = jnp.arange(k, dtype=jnp.int32)
+    vals, idxs = [], []
+    for _ in range(k_draft):
+        p_t = jnp.argmax(rem, axis=-1).astype(jnp.int32)
+        vals.append(jnp.take_along_axis(values, p_t[..., None], -1)[..., 0])
+        idxs.append(jnp.take_along_axis(indices, p_t[..., None], -1)[..., 0])
+        rem = rem & (pos != p_t[..., None])
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
 def densify(code: SparseCode) -> jax.Array:
     """Scatter a SparseCode back to its dense (..., d) form.
 

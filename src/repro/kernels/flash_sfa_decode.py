@@ -252,6 +252,107 @@ def flash_sfa_decode_paged(q, kv_pool, ki_pool, v_pool, block_tables,
     return out
 
 
+def _decode_multi_kernel(len_ref, q_ref, kv_ref, ki_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, d: int, scale: float,
+                         block_n: int, heads: int):
+    b = pl.program_id(0)              # query position * heads + head
+    nb = pl.program_id(1)
+    nnb = pl.num_programs(1)
+    length = len_ref[b]               # per query row: cache_len + pos + 1
+
+    @pl.when(nb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(nb * block_n < length)
+    def _compute():
+        kd = _densify_block(kv_ref[0], ki_ref[0].astype(jnp.int32), d)
+        q = q_ref[...].astype(jnp.float32)                      # (1, d)
+        s = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale          # (1, bn)
+        pos = nb * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[0, 0] * corr + p.sum()
+        vb = v_ref[0].astype(jnp.float32)                        # (bn, dv)
+        pv = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.full_like(m_ref, m_new)
+        l_ref[...] = jnp.full_like(l_ref, l_new)
+
+    @pl.when(nb == nnb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "scale", "heads", "block_n",
+                                             "interpret"))
+def flash_sfa_decode_multi(q, k_vals, k_idx, v, lengths, *, d: int,
+                           scale: float | None = None, heads: int = 1,
+                           block_n: int = 128, interpret: bool = True):
+    """Multi-token verify over ONE slot's token-major sparse cache.
+
+    The speculative verify pass scores C = draft_len + 1 query tokens
+    against the same cache in one launch: q ``(C*heads, d)`` dense queries;
+    k_vals/k_idx ``(heads, n_max, k)`` (one slot's cache, already folded to
+    query heads); v ``(heads, n_max, dv)``; lengths ``(C*heads,)`` — the
+    *per-query* causal lengths ``cache_len + pos + 1``, so draft position j
+    sees exactly the prefix a sequential decode at that step would see.
+    -> ``(C*heads, dv)`` f32.
+
+    The cache BlockSpec index maps are ``(b % heads, n, 0)``: all C queries
+    of a head stream the same tiles — the cache is fetched once per (head,
+    tile), not per query, which is what makes one batched full-k pass
+    cheaper than C sequential decodes. ``block_n`` should be set to the
+    serving page size so the online-softmax accumulation visits tokens in
+    exactly the paged decode kernel's tile order (bit-identical logits —
+    the greedy acceptance rule compares argmaxes across the two paths).
+    """
+    bh = q.shape[0]
+    _, nmax, kk = k_vals.shape
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    pad = (-nmax) % block_n
+    if pad:
+        k_vals = jnp.pad(k_vals, ((0, 0), (0, pad), (0, 0)))
+        k_idx = jnp.pad(k_idx, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    grid = (bh, (nmax + pad) // block_n)
+    out = pl.pallas_call(
+        functools.partial(_decode_multi_kernel, d=d, scale=scale,
+                          block_n=block_n, heads=heads),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda b, n, L: (b, 0)),
+                pl.BlockSpec((1, block_n, kk), lambda b, n, L: (b % heads, n, 0)),
+                pl.BlockSpec((1, block_n, kk), lambda b, n, L: (b % heads, n, 0)),
+                pl.BlockSpec((1, block_n, dv), lambda b, n, L: (b % heads, n, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dv), lambda b, n, L: (b, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, LANES), jnp.float32),
+                pltpu.VMEM((1, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), q, k_vals, k_idx, v)
+    return out
+
+
 # --------------------------------------------------------------------------
 # Layout 2: feature-major dense K cache + sparse query (beyond-paper)
 # --------------------------------------------------------------------------

@@ -23,6 +23,14 @@ prompts don't stall running decodes. Requests beyond the slot/page supply
 queue and are admitted FCFS; decode-time page exhaustion preempts the
 youngest request (recompute-on-resume, greedy streams unchanged).
 
+``--speculative`` serves through the ``SpeculativeDecodeEngine``
+(DESIGN.md §6, implies ``--paged``): each tick drafts ``--draft-len``
+tokens with the cache re-thresholded to the top-``--draft-k`` sub-code
+(default k/4 — same weights, same cache, k'^2/d draft cost), verifies
+them in one batched full-k pass, and accepts the longest matching prefix
+plus the bonus token. Greedy-only; streams are bit-identical to the
+non-speculative paged engine. Acceptance stats print at exit.
+
 Capability fallbacks (windowed or rope-protected layers, MLA, dense
 caches) and the at-rest cache bytes are printed at exit.
 """
@@ -36,7 +44,8 @@ from repro.core.kv_cache import kv_cache_nodes
 from repro.models import init as model_init
 from repro.models.backends import fallback_reports, set_fm_debug
 from repro.serve import (DecodeEngine, EngineConfig, PagedDecodeEngine,
-                         PagedEngineConfig)
+                         PagedEngineConfig, SpeculativeDecodeEngine,
+                         SpeculativeEngineConfig)
 
 
 def main():
@@ -62,6 +71,14 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: tokens landed per engine tick "
                          "interleaved with decode (default: whole-prompt)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding on the paged engine: "
+                         "draft with the nested top-k' sub-code, verify in "
+                         "one full-k pass (greedy-only; implies --paged)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="tokens drafted per speculative engine tick")
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="draft-pass sparse k' (default: sfa_k // 4)")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -71,15 +88,26 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     params = model_init(jax.random.PRNGKey(0), cfg)
+    if args.speculative:
+        args.paged = True
     if args.paged:
         budget = (None if args.mem_budget_mb is None
                   else int(args.mem_budget_mb * 2**20))
-        eng = PagedDecodeEngine(params, cfg, PagedEngineConfig(
-            max_slots=max(args.requests, 2), max_len=args.max_len,
-            page_size=args.page_size, mem_budget_bytes=budget,
-            prefill_chunk=args.prefill_chunk,
-            temperature=args.temperature,
-            decode_backend=args.decode_backend))
+        if args.speculative:
+            eng = SpeculativeDecodeEngine(params, cfg, SpeculativeEngineConfig(
+                max_slots=max(args.requests, 2), max_len=args.max_len,
+                page_size=args.page_size, mem_budget_bytes=budget,
+                prefill_chunk=args.prefill_chunk,
+                temperature=args.temperature,
+                decode_backend=args.decode_backend,
+                draft_len=args.draft_len, draft_k=args.draft_k))
+        else:
+            eng = PagedDecodeEngine(params, cfg, PagedEngineConfig(
+                max_slots=max(args.requests, 2), max_len=args.max_len,
+                page_size=args.page_size, mem_budget_bytes=budget,
+                prefill_chunk=args.prefill_chunk,
+                temperature=args.temperature,
+                decode_backend=args.decode_backend))
     else:
         eng = DecodeEngine(params, cfg, EngineConfig(
             max_slots=max(args.requests, 2), max_len=args.max_len,
@@ -102,6 +130,11 @@ def main():
         print(f"{steps} engine ticks, {total} tokens, "
               f"{eng.num_pages - 1} pool pages x {eng.ecfg.page_size} tok, "
               f"final page utilization {eng.page_utilization():.2f}")
+        if args.speculative:
+            s = eng.spec_stats
+            print(f"speculative: draft_len={eng.ecfg.draft_len} "
+                  f"draft_k={eng.draft_k} alpha={s['alpha']:.2f} "
+                  f"accepted-tokens/step={s['acc_per_step']:.2f}")
     else:
         while eng.live.any():
             eng.step()

@@ -1,9 +1,9 @@
 """Model zoo: configs -> (init, loss_fn, prefill, decode_step)."""
 from repro.models.model import (
     init, loss_fn, forward_logits, prefill, prefill_chunk, decode_step,
-    init_decode_caches, init_paged_decode_caches, segments,
+    verify_step, init_decode_caches, init_paged_decode_caches, segments,
 )
 
 __all__ = ["init", "loss_fn", "forward_logits", "prefill", "prefill_chunk",
-           "decode_step", "init_decode_caches", "init_paged_decode_caches",
-           "segments"]
+           "decode_step", "verify_step", "init_decode_caches",
+           "init_paged_decode_caches", "segments"]

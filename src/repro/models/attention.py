@@ -139,8 +139,8 @@ def _sfa_code(x, a: AttentionConfig) -> SparseCode:
     return sparsify(x[..., p:], a.sfa_k)
 
 
-def _request(a: AttentionConfig, *, mode: str, window,
-             paged: bool = False) -> AttentionRequest:
+def _request(a: AttentionConfig, *, mode: str, window, paged: bool = False,
+             speculative: bool = False) -> AttentionRequest:
     """Static backend request for this layer (trace-time selection)."""
     return AttentionRequest(
         mode=mode,
@@ -150,6 +150,7 @@ def _request(a: AttentionConfig, *, mode: str, window,
         mla=a.mla is not None,
         sparse=a.sfa_k is not None,
         paged=paged,
+        speculative=speculative,
     )
 
 
@@ -482,10 +483,10 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
                     window=None, mode: str = "train", cache=None,
                     cache_len=None, slot=None) -> AttentionOut:
     a = cfg.attention
-    if mode == "chunk" and a is not None and a.mla is not None:
+    if mode in ("chunk", "verify") and a is not None and a.mla is not None:
         raise NotImplementedError(
-            "chunked prefill does not cover MLA caches — serve MLA configs "
-            "through whole-prompt prefill (insert_pages)")
+            f"{mode} mode does not cover MLA caches — serve MLA configs "
+            f"through whole-prompt prefill (insert_pages), non-speculative")
     wants_seam = (mode == "train" and a is not None and a.sfa_k is not None
                   and a.bwd_emit in ("compact", "compact2"))
     if a.mla is not None:
@@ -556,8 +557,42 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
                              where=f"{cfg.name}/attention")
         ctx = sel.backend.decode(DecodeQuery(q=q), cache, cache_len,
                                  scale=scale, window=window, sfa_k=a.sfa_k,
-                                 rope_protect=a.sfa_rope_protect)
+                                 rope_protect=a.sfa_rope_protect,
+                                 draft_k=a.sfa_draft_k)
         o = ctx.astype(dt).reshape(b, 1, h * hd)
+        return AttentionOut(dense(params["w_o"], o, dt), cache)
+
+    if mode == "verify":
+        # speculative verify: land all C = draft_len + 1 tokens' FULL-k
+        # codes (overwriting the draft pass's low-k' decode writes — the
+        # K/V-resolution half of the rewind contract, DESIGN.md §6), then
+        # score every query at its own causal length in ONE batched pass
+        # through the backend's multi-token verify entry point. Same
+        # write/gather machinery as chunked prefill; only the scoring hop
+        # differs (backends without the capability fall back to the oracle
+        # with a structured report — exactly the chunk path's arithmetic).
+        assert cache is not None and cache_len is not None and slot is not None
+        if a.sfa_k is not None:
+            p = a.sfa_rope_protect
+            kc = _sfa_code(k, a)                      # (1, C, hkv, k)
+            cache = cache.write_chunk(slot, cache_len, k_vals=kc.values,
+                                      k_idx=kc.indices, v=v,
+                                      k_protect=k[..., :p] if p else None)
+        else:
+            cache = cache.write_chunk(slot, cache_len, k=k, v=v)
+        sel = select_backend(a.decode_backend,
+                             _request(a, mode="decode", window=window,
+                                      paged=isinstance(cache, PagedKV),
+                                      speculative=True),
+                             where=f"{cfg.name}/attention")
+        g = cache.gather_slot(slot)                   # batch-1 contiguous
+        lens = cache_len + jnp.arange(n)              # (C,)
+        block_n = cache.page_size if isinstance(cache, PagedKV) else 128
+        ctx = sel.backend.verify(DecodeQuery(q=q), g, lens, scale=scale,
+                                 window=window, sfa_k=a.sfa_k,
+                                 rope_protect=a.sfa_rope_protect,
+                                 block_n=block_n)
+        o = ctx.astype(dt).reshape(1, n, h * hd)
         return AttentionOut(dense(params["w_o"], o, dt), cache)
 
     if mode == "chunk":

@@ -55,10 +55,10 @@ from repro.core.kv_cache import (
     FeatureMajorKV, KVCache, MLAKV, MLASparseKV, PagedFeatureMajorKV,
     PagedKV, PagedSparseKV, SparseKV, unpack_indices,
 )
-from repro.core.sparse import sparsify, to_feature_major, topk_st
+from repro.core.sparse import sparsify, sub_k, to_feature_major, topk_st
 from repro.kernels.flash_sfa_decode import (
     flash_sfa_decode, flash_sfa_decode_fm, flash_sfa_decode_fm_paged,
-    flash_sfa_decode_paged,
+    flash_sfa_decode_multi, flash_sfa_decode_paged,
 )
 from repro.kernels.ops import dense_attention_op, sfa_attention_op
 
@@ -80,6 +80,7 @@ class AttentionRequest:
     mla: bool = False            # latent (MLA) attention
     sparse: bool = False         # sfa_k is set
     paged: bool = False          # cache is a paged (block-table) PagedKV
+    speculative: bool = False    # multi-token verify pass required
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +103,10 @@ class Capabilities:
     # indirected through the block table); backends without it fall back
     # to the oracle with a structured report when the engine serves paged
     paged: bool = False
+    # the backend has a multi-token verify pass (``verify``): C drafted
+    # queries scored against one slot's cache in a single launch, each at
+    # its own causal length — the speculative engine's full-k re-check
+    speculative: bool = False
 
 
 class DecodeQuery(NamedTuple):
@@ -144,6 +149,8 @@ class AttentionBackend:
             return "dense attention not supported"
         if req.paged and not c.paged:
             return "paged KV cache (block-table reads) not supported"
+        if req.speculative and not c.speculative:
+            return "no multi-token speculative verify path"
         return None
 
     # entry points ------------------------------------------------------
@@ -156,7 +163,18 @@ class AttentionBackend:
         raise NotImplementedError(self.name)
 
     def decode(self, query: DecodeQuery, cache: KVCache, lengths, *,
-               scale, window, sfa_k, rope_protect):
+               scale, window, sfa_k, rope_protect, draft_k=None):
+        raise NotImplementedError(self.name)
+
+    def verify(self, query: DecodeQuery, cache: KVCache, lengths, *,
+               scale, window, sfa_k, rope_protect, block_n=128):
+        """Speculative verify: score C drafted queries ``query.q (1, C, h,
+        d)`` against ONE slot's contiguous cache view in a single pass.
+        ``lengths (C,)`` are per-query cache lengths (query j sees positions
+        ``< lengths[j] + 1`` — the same +1 convention as ``decode``).
+        Returns ``(C, h, dv)``. ``block_n`` is the accumulation tile width
+        (set to the serving page size so logits match the paged decode
+        kernel bit-for-bit)."""
         raise NotImplementedError(self.name)
 
 
@@ -232,7 +250,7 @@ class XLABackend(AttentionBackend):
     caps = Capabilities(full=True, decode=True, causal=True,
                         bidirectional=True, window=True, rope_protect=True,
                         mla=True, sparse=True, dense=True,
-                        differentiable=True, paged=True)
+                        differentiable=True, paged=True, speculative=True)
 
     def full(self, q, k, v, *, num_heads, sfa_k, rope_protect, causal,
              window, scale, bwd_emit="dense"):
@@ -249,7 +267,7 @@ class XLABackend(AttentionBackend):
                                  chunk_size=min(1024, max(n, 128)))
 
     def decode(self, query: DecodeQuery, cache: KVCache, lengths, *,
-               scale, window, sfa_k, rope_protect):
+               scale, window, sfa_k, rope_protect, draft_k=None):
         if isinstance(cache, PagedKV):
             # oracle paged path: gather the block-table view back into the
             # contiguous layout and score as usual. O(n) extra copies — a
@@ -260,15 +278,23 @@ class XLABackend(AttentionBackend):
                                     sfa_k=sfa_k)
         h = query.q.shape[2]
         if isinstance(cache, FeatureMajorKV):
+            # the persistent image is dense: no stored code to re-threshold,
+            # so a draft pass narrows the *query* support to k' (the image
+            # layout's cost is query feature rows, not cache entries)
             return self._decode_feature_major(query, cache, lengths,
                                               scale=scale, window=window,
-                                              sfa_k=sfa_k)
+                                              sfa_k=draft_k or sfa_k)
         nmax = cache.v.shape[1]
         if isinstance(cache, SparseKV):
             p = rope_protect
-            qs = _st_protect(query.q, sfa_k, p)[:, 0]        # (b, h, d)
-            kv_r = expand_kv(cache.k_vals, h)                # (b, n, h, k)
-            ki_r = expand_kv(unpack_indices(cache.k_idx), h)
+            qs = _st_protect(query.q, draft_k or sfa_k, p)[:, 0]  # (b, h, d)
+            kv_c, ki_c = cache.k_vals, unpack_indices(cache.k_idx)
+            if draft_k:
+                # nested-k draft: re-threshold the stored top-k codes to k'
+                # (sub_k before the GQA repeat — group-size-x cheaper)
+                kv_c, ki_c = sub_k(kv_c, ki_c, draft_k)
+            kv_r = expand_kv(kv_c, h)                        # (b, n, h, k)
+            ki_r = expand_kv(ki_c, h)
             s = _gather_score(qs[..., p:] if p else qs, kv_r, ki_r, scale)
             if p:
                 kp = expand_kv(cache.k_protect, h)           # (b, n, h, p)
@@ -286,6 +312,17 @@ class XLABackend(AttentionBackend):
         pr = jax.nn.softmax(s, axis=1)                       # over n
         vr = expand_kv(cache.v, h)
         return jnp.einsum("bnh,bnhd->bhd", pr, vr.astype(jnp.float32))
+
+    def verify(self, query: DecodeQuery, cache: KVCache, lengths, *,
+               scale, window, sfa_k, rope_protect, block_n=128):
+        # oracle verify: each drafted query is exactly a single-token decode
+        # at its own causal length — the same vmapped-oracle arithmetic the
+        # chunked-prefill path scores with (bit-identical by construction)
+        def one(qt, ln):
+            return self.decode(DecodeQuery(q=qt[None, None]), cache,
+                               ln[None], scale=scale, window=window,
+                               sfa_k=sfa_k, rope_protect=rope_protect)[0]
+        return jax.vmap(one)(query.q[0], jnp.asarray(lengths, jnp.int32))
 
     def _decode_feature_major(self, query, cache, lengths, *, scale, window,
                               sfa_k):
@@ -344,7 +381,7 @@ class PallasBackend(AttentionBackend):
     caps = Capabilities(full=True, decode=True, causal=True,
                         bidirectional=True, window=False, rope_protect=False,
                         mla=False, sparse=True, dense=True,
-                        differentiable=True, paged=True)
+                        differentiable=True, paged=True, speculative=True)
 
     def __init__(self, bwd: str = "pallas"):
         self._bwd = bwd
@@ -369,21 +406,32 @@ class PallasBackend(AttentionBackend):
                                   impl="pallas")
 
     def decode(self, query: DecodeQuery, cache: SparseKV, lengths, *,
-               scale, window, sfa_k, rope_protect):
+               scale, window, sfa_k, rope_protect, draft_k=None):
         b, _, h, d = query.q.shape
-        qs = topk_st(query.q[:, 0], sfa_k)                   # (b, h, d)
+        qs = topk_st(query.q[:, 0], draft_k or sfa_k)        # (b, h, d)
         if isinstance(cache, PagedSparseKV):
+            kv_p, ki_p = cache.k_vals, cache.k_idx
+            if draft_k:
+                # nested-k draft: narrow the pools to their top-k' sub-codes
+                # (sub_k runs on the (hkv, P, page, k) leaves directly), so
+                # the kernel streams (page, k') tiles — the k'/k read cut
+                # the draft pass exists for. Unpacking is part of the
+                # narrowing copy; the full-k pass below never pays it.
+                kv_p, ki_p = sub_k(kv_p, unpack_indices(ki_p), draft_k)
             # paged kernel reads the shared pools in place through the
             # block table (scalar-prefetched index maps): no per-step
             # gather, no head repeat, and the packed uint8 indices are
             # unpacked per-tile in VMEM
             o = flash_sfa_decode_paged(
-                qs.reshape(b * h, d), cache.k_vals, cache.k_idx, cache.v,
+                qs.reshape(b * h, d), kv_p, ki_p, cache.v,
                 cache.block_table, lengths + 1, d=d, scale=scale,
                 heads=h, interpret=not _ON_TPU)
             return o.reshape(b, h, -1)
-        kv = _fold_expand(cache.k_vals, h)                   # (b*h, n, k)
-        ki = _fold_expand(unpack_indices(cache.k_idx), h)
+        kv_c, ki_c = cache.k_vals, unpack_indices(cache.k_idx)
+        if draft_k:
+            kv_c, ki_c = sub_k(kv_c, ki_c, draft_k)
+        kv = _fold_expand(kv_c, h)                           # (b*h, n, k)
+        ki = _fold_expand(ki_c, h)
         # f32 V: the kernel emits in V's dtype; keep the f32 accumulator
         # precision end-to-end so greedy tokens match the XLA oracle exactly
         vf = _fold_expand(cache.v, h).astype(jnp.float32)
@@ -392,6 +440,25 @@ class PallasBackend(AttentionBackend):
                              lens, d=d, scale=scale,
                              interpret=not _ON_TPU)
         return o.reshape(b, h, -1)
+
+    def verify(self, query: DecodeQuery, cache: SparseKV, lengths, *,
+               scale, window, sfa_k, rope_protect, block_n=128):
+        # one slot's contiguous (gather_slot) view, C queries, one launch:
+        # the multi kernel shares each cache tile across the C queries via
+        # its (b % heads, n, 0) index maps. ``block_n`` arrives as the
+        # serving page size, so every tile matches the paged decode
+        # kernel's accumulation order — verify logits are bit-identical to
+        # the sequential decode logits the acceptance rule compares against.
+        _, cq, h, d = query.q.shape
+        qs = topk_st(query.q[0], sfa_k)                      # (C, h, d)
+        kv = _fold_expand(cache.k_vals, h)                   # (h, n, k)
+        ki = _fold_expand(unpack_indices(cache.k_idx), h)
+        vf = _fold_expand(cache.v, h)
+        lens = jnp.repeat(jnp.asarray(lengths, jnp.int32) + 1, h)
+        o = flash_sfa_decode_multi(qs.reshape(cq * h, d), kv, ki, vf, lens,
+                                   d=d, scale=scale, heads=h,
+                                   block_n=block_n, interpret=not _ON_TPU)
+        return o.reshape(cq, h, -1)
 
 
 # Debug switch for the pallas_fm persistent-image integrity check (set via
@@ -411,8 +478,10 @@ def set_fm_debug(enabled: bool) -> None:
     global _FM_DEBUG
     _FM_DEBUG = bool(enabled)
     from repro.serve.engine import _jitted_fns, _paged_jitted_fns
+    from repro.serve.speculative import _spec_jitted_fns
     _jitted_fns.cache_clear()
     _paged_jitted_fns.cache_clear()
+    _spec_jitted_fns.cache_clear()
 
 
 def _assert_fm_image_equal(persistent, recomputed):
@@ -460,7 +529,7 @@ class PallasFMBackend(AttentionBackend):
                         paged=True)
 
     def decode(self, query: DecodeQuery, cache: FeatureMajorKV, lengths, *,
-               scale, window, sfa_k, rope_protect):
+               scale, window, sfa_k, rope_protect, draft_k=None):
         if not isinstance(cache, (FeatureMajorKV, PagedFeatureMajorKV)):
             raise TypeError(
                 f"pallas_fm serves the persistent FeatureMajorKV cache, got "
@@ -468,7 +537,11 @@ class PallasFMBackend(AttentionBackend):
                 f"init_cache/init_decode_caches so the layout follows the "
                 f"selected backend")
         b, _, h, d = query.q.shape
-        code = sparsify(query.q[:, 0], min(sfa_k, d))        # (b, h, k)
+        # speculative draft pass: the K image is dense feature-major and
+        # cannot be re-thresholded after the fact, so drafting narrows the
+        # QUERY side only — k' feature rows streamed instead of k
+        # (DESIGN.md §6's documented layout exception)
+        code = sparsify(query.q[:, 0], min(draft_k or sfa_k, d))  # (b, h, k)
         kq = code.values.shape[-1]
         qv = code.values.reshape(b * h, kq)
         qi = code.indices.reshape(b * h, kq)

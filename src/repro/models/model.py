@@ -394,14 +394,45 @@ def prefill_chunk(params, tokens, caches, offset, valid, slot, cfg: ModelConfig)
         cfg.d_model ** 0.5 if cfg.norm == "rmsnorm" else 1.0)
     positions = offset + jnp.arange(c)[None, :]
     if cfg.pos_embedding == "learned":
-        h = h + jnp.take(params["pos"]["w"], positions[0],
-                         axis=0).astype(dtype)[None]
+        # mode="clip": decode_step's bracket indexing clamps past the table
+        # (jnp.take would fill NaN), and chunk/verify must match it exactly
+        h = h + jnp.take(params["pos"]["w"], positions[0], axis=0,
+                         mode="clip").astype(dtype)[None]
     h, _, new_caches = _apply_stack(params, h, cfg, positions=positions,
                                     mode="chunk", caches=caches,
                                     cache_len=offset, slot=slot)
     h = L.apply_norm(params["final_norm"], h, cfg.norm)
     hv = jax.lax.dynamic_index_in_dim(h[0], valid - 1, 0, keepdims=False)
     logits = hv.astype(jnp.float32) @ _head_weights(params, cfg).T.astype(jnp.float32)
+    return logits, new_caches
+
+
+def verify_step(params, tokens, caches, offset, slot, cfg: ModelConfig):
+    """Speculative verify: score ``tokens (1, C)`` of ``slot`` (the pending
+    token + C-1 drafted tokens) at positions ``offset..offset+C-1`` in one
+    batched full-k pass, returning the logits at EVERY position
+    ``(C, vocab)`` plus the updated caches.
+
+    Structurally ``prefill_chunk`` with two differences: attention runs in
+    mode="verify" (the backend's multi-token verify kernel, each query at
+    its own causal length), and all C positions' logits come back — the
+    greedy acceptance rule compares drafted token j+1 against
+    ``argmax(logits[j])``. The chunk write lands FULL-k codes at all C
+    positions, overwriting whatever the low-k' draft pass wrote there."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    c = tokens.shape[1]
+    h = L.embed(params["embed"], tokens, dtype) * (
+        cfg.d_model ** 0.5 if cfg.norm == "rmsnorm" else 1.0)
+    positions = offset + jnp.arange(c)[None, :]
+    if cfg.pos_embedding == "learned":
+        # mode="clip" to match decode_step's clamping bracket indexing
+        h = h + jnp.take(params["pos"]["w"], positions[0], axis=0,
+                         mode="clip").astype(dtype)[None]
+    h, _, new_caches = _apply_stack(params, h, cfg, positions=positions,
+                                    mode="verify", caches=caches,
+                                    cache_len=offset, slot=slot)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    logits = h[0].astype(jnp.float32) @ _head_weights(params, cfg).T.astype(jnp.float32)
     return logits, new_caches
 
 

@@ -1,6 +1,9 @@
 from repro.serve.engine import (
     DecodeEngine, EngineConfig, PagedDecodeEngine, PagedEngineConfig,
 )
+from repro.serve.speculative import (
+    SpeculativeDecodeEngine, SpeculativeEngineConfig,
+)
 from repro.serve.kv_cache import (
     cache_bytes_per_token, cache_stats, CacheStats, memory_ratio_appendix_j,
     pack_indices, unpack_indices, sparse_k_bytes, dense_k_bytes,
@@ -8,7 +11,8 @@ from repro.serve.kv_cache import (
 )
 
 __all__ = ["DecodeEngine", "EngineConfig", "PagedDecodeEngine",
-           "PagedEngineConfig", "cache_bytes_per_token",
+           "PagedEngineConfig", "SpeculativeDecodeEngine",
+           "SpeculativeEngineConfig", "cache_bytes_per_token",
            "cache_stats", "CacheStats", "memory_ratio_appendix_j",
            "pack_indices", "unpack_indices", "sparse_k_bytes",
            "dense_k_bytes", "realized_cache_bytes_per_token", "cache_nbytes",

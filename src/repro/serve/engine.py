@@ -48,6 +48,20 @@ def _jitted_fns(cfg: ModelConfig):
     return pre, dec
 
 
+class _SamplerMixin:
+    """Shared sampling policy: greedy at ``temperature <= 0``, else
+    temperature-scaled categorical off the engine's own PRNG stream. One
+    implementation for every engine (slot, paged, speculative) — the
+    engines only need ``self.ecfg.temperature`` and ``self._rng``."""
+
+    def _sample(self, logits):
+        if self.ecfg.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        return jax.random.categorical(
+            sub, logits / self.ecfg.temperature, -1).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_slots: int = 8
@@ -60,7 +74,7 @@ class EngineConfig:
     decode_backend: Optional[str] = None
 
 
-class DecodeEngine:
+class DecodeEngine(_SamplerMixin):
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig):
         if ecfg.decode_backend is not None and cfg.attention is not None:
             cfg = dataclasses.replace(cfg, attention=dataclasses.replace(
@@ -149,13 +163,6 @@ class DecodeEngine:
                            and int(tok[0]) != self.ecfg.eos_id)
         return slot
 
-    def _sample(self, logits):
-        if self.ecfg.temperature <= 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        self._rng, sub = jax.random.split(self._rng)
-        return jax.random.categorical(
-            sub, logits / self.ecfg.temperature, -1).astype(jnp.int32)
-
     def step(self) -> dict[int, int]:
         """Decode one token for every live slot; returns {slot: token}."""
         if not self.live.any():
@@ -236,7 +243,7 @@ class _PagedRequest:
     budget: Optional[int] = None
 
 
-class PagedDecodeEngine:
+class PagedDecodeEngine(_SamplerMixin):
     """Paged/block-KV serving engine (DESIGN.md §5).
 
     vLLM-style block tables over the typed paged cache pytrees: one shared
@@ -334,13 +341,6 @@ class PagedDecodeEngine:
                                         prompt=np.asarray(prompt, np.int64),
                                         max_new=max_new_tokens))
         return rid
-
-    def _sample(self, logits):
-        if self.ecfg.temperature <= 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        self._rng, sub = jax.random.split(self._rng)
-        return jax.random.categorical(
-            sub, logits / self.ecfg.temperature, -1).astype(jnp.int32)
 
     # ---- page + block-table plumbing ---------------------------------
     def _push_bt(self):
@@ -464,28 +464,37 @@ class PagedDecodeEngine:
         else:
             self._finish(slot)
 
+    def _decode_page_span(self, slot: int):
+        """Logical page indices that must be allocated before this slot
+        decodes this tick — the page under the next write position. The
+        speculative engine widens this to cover its draft lookahead."""
+        pidx = int(self.lengths[slot]) // self.ecfg.page_size
+        return range(pidx, pidx + 1)
+
     def _ensure_decode_pages(self):
-        """Allocate the page under each live slot's next write position;
-        page exhaustion preempts the youngest live request (its pages come
-        back to the pool; it requeues at the front)."""
-        page = self.ecfg.page_size
+        """Allocate the page span under each live slot's upcoming writes
+        (``_decode_page_span``); page exhaustion preempts the youngest live
+        request (its pages come back to the pool; it requeues at the
+        front)."""
         requeue = []
         for slot in np.where(self.live)[0]:
             if not self.live[slot]:
                 continue                      # preempted below this tick
-            pidx = int(self.lengths[slot]) // page
-            while self.bt[slot, pidx] == 0 and not self.free_pages:
-                live = np.where(self.live)[0]
-                victims = sorted(live, key=lambda s: int(self.slot_seq[s]))
-                victim = int(victims[-1])     # youngest admission
-                requeue.append(self._preempt(victim))
-                if victim == slot:
+            for pidx in self._decode_page_span(slot):
+                if not self.live[slot]:
                     break
-            if not self.live[slot]:
-                continue
-            if self.bt[slot, pidx] == 0:
-                self.bt[slot, pidx] = self.free_pages.pop()
-                self._bt_dirty = True
+                while self.bt[slot, pidx] == 0 and not self.free_pages:
+                    live = np.where(self.live)[0]
+                    victims = sorted(live, key=lambda s: int(self.slot_seq[s]))
+                    victim = int(victims[-1])     # youngest admission
+                    requeue.append(self._preempt(victim))
+                    if victim == slot:
+                        break
+                if not self.live[slot]:
+                    break
+                if self.bt[slot, pidx] == 0:
+                    self.bt[slot, pidx] = self.free_pages.pop()
+                    self._bt_dirty = True
         # youngest was preempted first; resume in admission order (oldest
         # requeued entry at the very front)
         for req in requeue:

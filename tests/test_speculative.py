@@ -1,0 +1,230 @@
+"""Self-speculative decoding tests (serve/speculative.py, DESIGN.md §6):
+the nested-k sub_k property, greedy bit-identity with the non-speculative
+paged engine across decode backends, acceptance under preemption pressure,
+cache-rewind page accounting, and the engine-mode guard rails.
+
+The identity tests are the subsystem's contract: greedy speculative decode
+must emit token-for-token what the PagedDecodeEngine emits — the draft
+pass only ever proposes, the full-k verify pass decides, and the verify
+chunk-write overwrites every provisional low-k' draft K/V with full-k
+codes before any read sees it."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init as model_init
+from repro.serve import (PagedDecodeEngine, PagedEngineConfig,
+                         SpeculativeDecodeEngine, SpeculativeEngineConfig,
+                         paged_page_bytes)
+
+PROMPT = np.array([2, 3, 5, 7, 11, 13, 17, 19, 23, 2, 3], np.int64)
+
+
+def _cfg(name="gpt2-small-sfa8", backend=None):
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32")
+    if backend is not None:
+        cfg = dataclasses.replace(cfg, attention=dataclasses.replace(
+            cfg.attention, decode_backend=backend))
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def sfa_setup():
+    cfg = _cfg()
+    return cfg, model_init(jax.random.PRNGKey(0), cfg)
+
+
+def _paged(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_size", 8)
+    return PagedDecodeEngine(params, cfg, PagedEngineConfig(**kw))
+
+
+def _spec(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("draft_len", 4)
+    return SpeculativeDecodeEngine(params, cfg, SpeculativeEngineConfig(**kw))
+
+
+# --------------------------------------------------------------------------
+# nested-k property of sub_k (core/sparse.py)
+# --------------------------------------------------------------------------
+
+def test_sub_k_nested_property():
+    """hypothesis: re-thresholding a stored top-k code to k' equals
+    sparsifying the original row at k' directly — values, indices, AND
+    tie-breaks — for every k' in {k/4, k/2, k}, with ascending indices and
+    nested supports. This is the whole basis of free self-drafting."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    import jax.numpy as jnp
+
+    from repro.core import sparsify
+    from repro.core.sparse import sub_k
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 8), st.sampled_from([16, 32, 64, 128]),
+           st.sampled_from([4, 8, 16]), st.integers(0, 2**31 - 1),
+           st.booleans())
+    def prop(rows, d, k, seed, ties):
+        x = np.array(jax.random.normal(jax.random.PRNGKey(seed), (rows, d)),
+                     copy=True)
+        if ties:
+            x[:, :: max(1, d // 4)] = 1.0     # force |.|-ties across rows
+        x = jnp.asarray(x)
+        code = sparsify(x, k)
+        supports = []
+        for kd in sorted({max(1, k // 4), max(1, k // 2), k}):
+            sv, si = sub_k(code.values, code.indices, kd)
+            ref = sparsify(x, kd)
+            np.testing.assert_array_equal(np.asarray(sv),
+                                          np.asarray(ref.values))
+            np.testing.assert_array_equal(np.asarray(si),
+                                          np.asarray(ref.indices))
+            si = np.asarray(si)
+            assert (np.diff(si, axis=-1) > 0).all()      # ascending
+            supports.append([set(row) for row in si])
+        for small, big in zip(supports, supports[1:]):   # nesting chain
+            for s, b in zip(small, big):
+                assert s <= b
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# greedy bit-identity with the non-speculative paged engine
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", [
+    "xla",
+    "pallas",
+    # interpret-mode kernels are slow on CPU: slow lane only (pallas_fm
+    # verify additionally routes through the xla oracle fallback)
+    pytest.param("pallas_fm", marks=pytest.mark.slow),
+])
+def test_speculative_matches_paged_engine(backend):
+    """Draft at k'=k/4, verify at full k, accept greedily: the emitted
+    stream is token-for-token the PagedDecodeEngine stream, and at least
+    one token lands per tick (the bonus token)."""
+    cfg = _cfg(backend=backend)
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    ref = _paged(cfg, params).generate(PROMPT, max_new_tokens=10)
+    eng = _spec(cfg, params)
+    assert eng.generate(PROMPT, max_new_tokens=10) == ref
+    s = eng.spec_stats
+    assert s["acc_per_step"] >= 1.0
+    assert 0.0 <= s["alpha"] <= 1.0
+
+
+@pytest.mark.parametrize("draft_len", [1, 3])
+def test_speculative_draft_len_invariance(sfa_setup, draft_len):
+    """The lookahead depth is a throughput knob, never a correctness knob:
+    every draft_len produces the identical greedy stream."""
+    cfg, params = sfa_setup
+    ref = _paged(cfg, params).generate(PROMPT, max_new_tokens=8)
+    eng = _spec(cfg, params, draft_len=draft_len)
+    assert eng.generate(PROMPT, max_new_tokens=8) == ref
+
+
+def test_speculative_near_max_len(sfa_setup):
+    """Drafting right up against max_len: lookahead positions past the
+    block table route to the trash page (kv_cache._chunk_coords) and the
+    per-token max_len check truncates the accepted run exactly where the
+    base engine stops."""
+    cfg, params = sfa_setup
+    ref = _paged(cfg, params, max_len=16).generate(PROMPT, max_new_tokens=12)
+    eng = _spec(cfg, params, max_len=16, draft_len=4)
+    got = eng.generate(PROMPT, max_new_tokens=12)
+    assert got == ref
+    # prefill token + decodes until lengths hits max_len: 16 - 11 + 1
+    assert len(got) == 16 - len(PROMPT) + 1      # hit the max_len wall
+
+
+# --------------------------------------------------------------------------
+# scheduling: multi-request, forced preemption, page accounting
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_speculative_preemption_matches_solo_runs(sfa_setup, chunk):
+    """Four requests, two slots, six 8-token pages: the widened speculative
+    page span makes decode-time exhaustion preempt earlier and the rewind
+    returns rejected-lookahead pages — yet recompute-on-resume keeps every
+    greedy stream exactly equal to its solo non-speculative run, and every
+    page comes back."""
+    cfg, params = sfa_setup
+    prompts = [PROMPT, PROMPT[:7], PROMPT[:5], PROMPT[:9]]
+    news = [6, 8, 5, 7]
+    solo = [_paged(cfg, params).generate(p, max_new_tokens=mn)
+            for p, mn in zip(prompts, news)]
+    per = paged_page_bytes(cfg, page_size=8)
+    eng = _spec(cfg, params, prefill_chunk=chunk, mem_budget_bytes=6 * per)
+    rids = [eng.add_request(p, max_new_tokens=mn)
+            for p, mn in zip(prompts, news)]
+    steps = 0
+    while eng.busy:
+        eng.step()
+        steps += 1
+        assert steps < 500, "scheduler livelock"
+    for rid, want in zip(rids, solo):
+        assert eng.outputs[rid] == want
+    # every page returned (rewind + finish); block tables fully cleared
+    assert len(eng.free_pages) == eng.num_pages - 1
+    assert eng.page_utilization() == 0.0
+    assert (eng.bt == 0).all()
+
+
+@pytest.mark.slow
+def test_speculative_long_stress():
+    """256 decoded tokens through the speculative tick loop (many page
+    boundaries, many rewinds): stream identical to the paged engine and
+    the acceptance accounting stays consistent."""
+    cfg = _cfg(backend="xla")
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    ref = _paged(cfg, params, max_len=288).generate(PROMPT,
+                                                    max_new_tokens=256)
+    eng = _spec(cfg, params, max_len=288, draft_len=4)
+    assert eng.generate(PROMPT, max_new_tokens=256) == ref
+    s = eng.spec_stats
+    # the first token is emitted at prefill activation, not by a decode tick
+    assert s["emitted"] == 255
+    assert s["accepted"] + s["ticks"] >= s["emitted"]   # m_t + 1 per tick
+    assert len(eng.free_pages) == eng.num_pages - 1
+
+
+# --------------------------------------------------------------------------
+# guard rails
+# --------------------------------------------------------------------------
+
+def test_speculative_requires_sfa():
+    cfg = _cfg("gpt2-small")
+    with pytest.raises(ValueError, match="sfa_k"):
+        SpeculativeDecodeEngine({}, cfg, SpeculativeEngineConfig())
+
+
+def test_speculative_refuses_mla():
+    cfg = _cfg("deepseek-v2-236b")
+    assert cfg.attention.mla is not None
+    with pytest.raises(NotImplementedError, match="MLA"):
+        SpeculativeDecodeEngine({}, cfg, SpeculativeEngineConfig())
+
+
+def test_speculative_greedy_only(sfa_setup):
+    cfg, params = sfa_setup
+    with pytest.raises(ValueError, match="greedy"):
+        SpeculativeDecodeEngine(params, cfg,
+                                SpeculativeEngineConfig(temperature=0.7))
+
+
+def test_speculative_validates_draft_params(sfa_setup):
+    cfg, params = sfa_setup
+    with pytest.raises(ValueError, match="draft_len"):
+        _spec(cfg, params, draft_len=0)
+    with pytest.raises(ValueError, match="draft_k"):
+        _spec(cfg, params, draft_k=cfg.attention.sfa_k + 1)
