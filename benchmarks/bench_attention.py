@@ -37,8 +37,10 @@ from repro.core.sparse import SparseCode, to_feature_major
 from repro.kernels.ref import rtopk_ref
 from repro.kernels import (flash_sfa, flash_sfa_bwd, flash_attention,
                            flash_attention_bwd)
+from repro.kernels.flash_sfa import block_skip_stats
 from repro.kernels.flash_sfa_decode import (flash_sfa_decode,
                                             flash_sfa_decode_fm)
+from repro.kernels.rtopk import proj_rtopk, rtopk
 from repro.utils.roofline import PEAK_FLOPS, HBM_BW
 
 
@@ -92,6 +94,26 @@ def attn_flops(n: int, d: int, dv: int) -> float:
     return 2 * n * n / 2 * (d + dv)                       # causal
 
 
+def fwd_code_write_bytes(n: int, k: int) -> float:
+    """Per-(bh) forward code-write bytes: q + k codes, vals 2B + idx 2B."""
+    return 2 * n * k * (2 + 2)
+
+
+def fwd_fused_bytes(n: int, d: int, k: int, dv: int) -> float:
+    """Per-(bh) fwd HBM bytes on the fused projection path (DESIGN.md §2):
+    the projection tile is sparsified in VMEM, so only the (n, k) codes are
+    written, then FlashSFA moves its usual sfa_bytes. The projection input/
+    weight reads are identical on both paths and cancel in the ratio."""
+    return fwd_code_write_bytes(n, k) + sfa_bytes(n, d, k, dv)
+
+
+def fwd_unfused_bytes(n: int, d: int, k: int, dv: int) -> float:
+    """Unfused composition: dense q/k activations round-trip HBM (projection
+    writes n·d each, rtopk reads them back) before the codes are written."""
+    return 2 * n * d * 2 * 2 + fwd_code_write_bytes(n, k) + \
+        sfa_bytes(n, d, k, dv)
+
+
 def decode_sparse_bytes(n: int, k: int, dv: int) -> float:
     """Per-(bh) decode-step HBM bytes, sparse K cache: (val+uint8 idx)·k per
     token + dense V + the O(1) query/output."""
@@ -125,8 +147,10 @@ def run(quick: bool = True, smoke: bool = False):
     rng = jax.random.PRNGKey(0)
     ns = [256, 512] if quick else [256, 512, 1024, 2048]
     configs = [(64, 8), (64, 4), (128, 16), (128, 8)]
-    if smoke:                       # CI fast-lane: signatures, not trends
-        ns, configs = [128], [(64, 8)]
+    if smoke:                       # CI fast-lane: tiny n, but EVERY (d, k)
+        ns = [128]                  # point the snapshot carries — the gate
+        # fails on uncovered snapshot keys (check_trajectory.py), so the
+        # smoke sweep must keep full (d, k)/config coverage.
     bh = 2
     for n in ns:
         for d, k in configs:
@@ -150,6 +174,75 @@ def run(quick: bool = True, smoke: bool = False):
             rows.append((f"attn_n{n}_d{d}_k{k}", t_sfa,
                          f"dense_us={t_dense:.0f};byte_ratio={br:.2f};"
                          f"tpu_model_speedup={tpu_dense / tpu_sfa:.2f}"))
+            # fused forward (DESIGN.md §2): projection -> top-k in one
+            # kernel (codes are the only q/k HBM writes) + FlashSFA with
+            # overlap-aware block skipping. block 64 keeps the tile grid
+            # multi-block at smoke n so the causal dead-tile skip is
+            # exercised (and asserted) even at n=128.
+            m_in = 32
+            x_in = jax.random.normal(jax.random.fold_in(rng, 7),
+                                     (1, n, m_in), jnp.float32)
+            wq_h = jax.random.normal(jax.random.fold_in(rng, 8),
+                                     (bh, m_in, d), jnp.float32) * 0.1
+            wk_h = jax.random.normal(jax.random.fold_in(rng, 9),
+                                     (bh, m_in, d), jnp.float32) * 0.1
+
+            @jax.jit
+            def _fused_codes(x, wq, wk):
+                fqv, fqi = proj_rtopk(x, wq, k=k)
+                fkv, fki = proj_rtopk(x, wk, k=k)
+                rs = lambda t: t.reshape(bh, n, k)
+                return rs(fqv), rs(fqi), rs(fkv), rs(fki)
+
+            @jax.jit
+            def _fused_fwd(x, wq, wk, vv):
+                fqv, fqi, fkv, fki = _fused_codes(x, wq, wk)
+                return flash_sfa(fqv, fqi, fkv, fki, vv, d=d, block_q=64,
+                                 block_k=64, block_skip=True)
+
+            @jax.jit
+            def _unfused_fwd(x, wq, wk, vv):
+                yq = jnp.einsum("bnm,hmd->hnd", x, wq)    # dense q round-trip
+                yk = jnp.einsum("bnm,hmd->hnd", x, wk)
+                uqv, uqi = rtopk(yq, k)
+                ukv, uki = rtopk(yk, k)
+                return flash_sfa(uqv, uqi, ukv, uki, vv, d=d, block_q=64,
+                                 block_k=64)
+
+            t_fused = _time(_fused_fwd, x_in, wq_h, wk_h, v)
+            t_unfused = _time(_unfused_fwd, x_in, wq_h, wk_h, v)
+            fqv, fqi, fkv, fki = _fused_codes(x_in, wq_h, wk_h)
+            # realized == analytic, kvreal-style: the codes are the ONLY
+            # q/k-side HBM writes the fused path makes...
+            realized_codes = sum(t.size for t in (fqv, fqi, fkv, fki)) \
+                // bh * 2
+            assert realized_codes == fwd_code_write_bytes(n, k), \
+                (realized_codes, fwd_code_write_bytes(n, k))
+            # ...and the kernel output is the only other fwd write
+            o_fused = _fused_fwd(x_in, wq_h, wk_h, v)
+            realized_out = o_fused.size // bh * 2
+            assert realized_out == n * d * 2, (realized_out, n * d * 2)
+            o_unfused = _unfused_fwd(x_in, wq_h, wk_h, v)
+            assert jnp.max(jnp.abs(o_fused - o_unfused)) <= 1e-4, \
+                "fused forward diverged from the unfused composition"
+            skip0, skip1, fetch2 = block_skip_stats(
+                fqv, fqi, fkv, fki, d=d, causal=True, block_q=64, block_k=64)
+            assert float(skip0) > 0, \
+                "causal config must skip dead tiles (block-skip regression)"
+            fwd_write = fwd_code_write_bytes(n, k) + n * d * 2
+            br_f = fwd_unfused_bytes(n, d, k, d) / fwd_fused_bytes(n, d, k, d)
+            tpu_unf = max(attn_flops(n, d, d) / PEAK_FLOPS,
+                          fwd_unfused_bytes(n, d, k, d) / HBM_BW) * 1e6
+            tpu_fus = max(attn_flops(n, d, d) / PEAK_FLOPS,
+                          fwd_fused_bytes(n, d, k, d) / HBM_BW) * 1e6
+            rows.append((f"fwd_n{n}_d{d}_k{k}", t_fused,
+                         f"unfused_us={t_unfused:.0f};"
+                         f"byte_ratio_fused={br_f:.2f};"
+                         f"write_B_fused={fwd_write:.0f};"
+                         f"skip_frac={float(skip0):.3f};"
+                         f"overlap_skip_frac={float(skip1):.3f};"
+                         f"fetch_frac={float(fetch2):.3f};"
+                         f"tpu_model_speedup_fused={tpu_unf / tpu_fus:.2f}"))
             # backward kernels (recompute-in-tile; residuals from the fwd),
             # both emit layouts: dense (n, d) rows vs compact (n, k) codes
             o_sfa, lse_sfa = flash_sfa(qv, qi, kv_, ki, v, d=d,
@@ -226,8 +319,10 @@ def run(quick: bool = True, smoke: bool = False):
     # serving path; fm_remat_us re-materializes the image from token-major
     # codes before the kernel — the retired pre-FeatureMajorKV per-step
     # cost, kept measured so the win stays visible.
+    # the decode smoke keeps both (d, k) points: the trajectory gate fails
+    # on snapshot keys the smoke sweep does not cover
     for n in ([128] if smoke else [512] if quick else [512, 2048]):
-        for d, k in (((64, 8),) if smoke else ((64, 8), (128, 8))):
+        for d, k in ((64, 8), (128, 8)):
             kk_ = jax.random.normal(jax.random.fold_in(rng, 4), (bh, n, d))
             q1 = jax.random.normal(jax.random.fold_in(rng, 5), (bh, d))
             v1 = jax.random.normal(jax.random.fold_in(rng, 6), (bh, n, d))

@@ -18,14 +18,20 @@ of the committed trajectory file:
     field the snapshot row carries must still exist (fields may be *added*
     freely; a field disappearing means a kernel signature or byte-model row
     was dropped), and every row *kind* (attn / attn_bwd / decode) present
-    in the snapshot must still appear. Snapshot keys outside the smoke
-    sweep are listed as uncovered — visible, not failing (the quick/full
-    sweeps cover them when the snapshot is regenerated).
+    in the snapshot must still appear. Snapshot keys the smoke sweep does
+    not cover FAIL the gate: every committed key must stay gated, so the
+    smoke sweeps run every (d, k)/mix point the snapshot carries (n stays
+    tiny — the gated fields are n-invariant).
 
 Rows are keyed by ``(kind, d, k)`` and NOT by n: the gated quantities are
 exactly n-invariant (every byte term is linear in n; ratios cancel it,
 write bytes normalize by it), which is what lets the cheap smoke sweep
 (n=128) gate against the committed quick-mode trajectory (n=256/512).
+``fwd`` rows gate the fused-forward write path (proj->topk code writes +
+FlashSFA outputs) the same way: byte_ratio_fused higher-is-better,
+write_B_fused per-token lower-is-better; the block-skip fractions are
+reported but not gated (they depend on data statistics, not the kernel
+contract — the bench asserts skip_frac > 0 on causal configs itself).
 Measured ``*_us`` wall-clock fields are never gated (CPU interpret-mode
 timing is trend-only noise), and neither are ``tpu_model_speedup*`` fields:
 the roofline max(flops, bytes) crosses over with n, so they are NOT
@@ -52,7 +58,7 @@ import pathlib
 import re
 
 ROW_RE = re.compile(
-    r"^(?P<kind>attn_bwd|attn|decode)_n(?P<n>\d+)_d(?P<d>\d+)_k(?P<k>\d+)$")
+    r"^(?P<kind>attn_bwd|attn|fwd|decode)_n(?P<n>\d+)_d(?P<d>\d+)_k(?P<k>\d+)$")
 
 # serving rows are keyed by traffic mix + engine; their gated fields are
 # deterministic scheduling metrics (greedy decode, eos_id=-1: termination
@@ -194,6 +200,14 @@ def spec_floor_problems(rows) -> list[str]:
     return problems
 
 
+def uncovered_keys(baseline_rows, new_rows) -> list:
+    """Snapshot keys the new (smoke) run does not gate — these FAIL: every
+    committed key must stay covered, else a regression could hide behind a
+    shrunken sweep."""
+    return sorted(index_rows(baseline_rows).keys() -
+                  index_rows(new_rows).keys())
+
+
 def load_baseline(path: pathlib.Path, entry: int) -> list:
     history = json.loads(path.read_text())
     if not history:
@@ -242,13 +256,14 @@ def main() -> None:
         if suite == "serving":
             problems += spec_floor_problems(rows)
         gated = index_rows(rows)
-        uncovered = sorted(index_rows(baseline).keys() - gated.keys())
+        uncovered = uncovered_keys(baseline, rows)
         print(f"trajectory gate [{suite}]: {len(gated)} smoke row keys vs "
               f"snapshot {base_path.name}[{args.entry}] (tol {args.tol:.0%})")
-        if uncovered:
-            print(f"note: {len(uncovered)} snapshot keys outside the smoke "
-                  f"sweep (ungated here; regenerating the snapshot covers "
-                  f"them): {uncovered}")
+        for key in uncovered:
+            problems.append(
+                f"snapshot key {key} is not covered by the [{suite}] smoke "
+                f"sweep — every committed key must stay gated (extend the "
+                f"smoke sweep or regenerate the snapshot)")
     if problems:
         for p in problems:
             print(f"FAIL: {p}")

@@ -57,6 +57,15 @@ class AttentionConfig:
     # the generic vjp contract). "compact2" may also be requested directly,
     # mainly as a parity/bench surface for the pair-widened kernel emit.
     bwd_emit: str = "dense"          # "dense" | "compact" | "compact2"
+    # Fused forward on seam-eligible layers (DESIGN.md §2): projection ->
+    # [RoPE] -> top-k runs in one Pallas kernel (kernels/rtopk.py::proj_rtopk)
+    # so dense q/k activations never round-trip HBM — only the (n, k) codes
+    # are written — and FlashSFA runs with overlap-aware block skipping
+    # (causally-dead and zero-feature-overlap tiles skipped at the compute
+    # AND the K/V DMA level, exact softmax semantics). Only consulted where
+    # the compact seam engages; the unfused composition is kept as the
+    # parity oracle (tests/test_fused_forward.py).
+    fwd_fuse: bool = True
     # SFA-on-RoPE handling (paper A.1): keep a few leading dims dense so
     # position info survives sparsification; 0 = sparsify everything.
     sfa_rope_protect: int = 0

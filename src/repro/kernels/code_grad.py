@@ -41,7 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 from repro.kernels.flash_sfa import _densify_block
 
 
@@ -79,7 +79,7 @@ def _dx_kernel(vals_ref, idx_ref, w_ref, out_ref, acc_ref, *, d: int,
 @functools.partial(jax.jit, static_argnames=("d", "block_n", "block_m",
                                              "interpret"))
 def code_grad_dx(vals, idx, w, *, d: int, block_n: int = 128,
-                 block_m: int = 128, interpret: bool = True):
+                 block_m: int = 128, interpret: bool | None = None):
     """dx = Σ_h scatter(vals_h, idx_h) @ w_hᵀ without densifying in HBM.
 
     vals/idx: (H, n, w) compact code-grads at any static code width w (k,
@@ -112,7 +112,7 @@ def code_grad_dx(vals, idx, w, *, d: int, block_n: int = 128,
         scratch_shapes=[pltpu.VMEM((block_n, block_m), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(vals, idx, w)
     return out[:n, :m]
 
@@ -138,7 +138,7 @@ def _dw_kernel(x_ref, vals_ref, idx_ref, out_ref, acc_ref, *, d: int,
 @functools.partial(jax.jit, static_argnames=("d", "block_n", "block_m",
                                              "interpret"))
 def code_grad_dw(x, vals, idx, *, d: int, block_n: int = 128,
-                 block_m: int = 128, interpret: bool = True):
+                 block_m: int = 128, interpret: bool | None = None):
     """dW_h = xᵀ @ scatter(vals_h, idx_h) without densifying in HBM.
 
     x: (n, m) projection input (m = d_model, tokens flattened over batch);
@@ -172,6 +172,6 @@ def code_grad_dw(x, vals, idx, *, d: int, block_n: int = 128,
         scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, vals, idx)
     return out[:, :m]

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 NEG_INF = -1e30
 LANES = 128
@@ -76,8 +76,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
 @functools.partial(jax.jit, static_argnames=(
     "causal", "scale", "block_q", "block_k", "interpret", "return_residuals"))
 def _flash_fwd(q, k, v, *, causal: bool = True, scale: float | None = None,
-               block_q: int = 128, block_k: int = 128, interpret: bool = True,
+               block_q: int = 128, block_k: int = 128,
+               interpret: bool | None = None,
                return_residuals: bool = False):
+    interpret = resolve_interpret(interpret)
     bh, nq, d = q.shape
     nk = k.shape[1]
     dv = v.shape[-1]
@@ -152,7 +154,8 @@ _flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True, return_residuals: bool = False):
+                    interpret: bool | None = None,
+                    return_residuals: bool = False):
     """Dense flash attention. q/k/v: (bh, n, d) -> (bh, n, dv).
 
     Differentiable: ``jax.grad`` executes the Pallas backward kernels in

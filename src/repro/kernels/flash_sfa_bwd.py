@@ -59,7 +59,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 from repro.kernels.flash_sfa import _densify_block
 
 NEG_INF = -1e30
@@ -312,7 +312,7 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
         out_specs=pl.BlockSpec((1, block_q, dq_w), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, nqp, dq_w), q_ops[0].dtype),
         scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
-        compiler_params=cparams, interpret=interpret,
+        compiler_params=cparams, interpret=resolve_interpret(interpret),
     )(*operands)
 
     dk, dvout = pl.pallas_call(
@@ -331,7 +331,7 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
             pltpu.VMEM((block_k, d), jnp.float32),
             pltpu.VMEM((block_k, dv_dim), jnp.float32),
         ],
-        compiler_params=cparams, interpret=interpret,
+        compiler_params=cparams, interpret=resolve_interpret(interpret),
     )(*operands)
     return dq[:, :nq], dk[:, :nk], dvout[:, :nk]
 
@@ -342,7 +342,7 @@ def _bwd_impl(q_ops, k_ops, v, o, lse, g, *, d, causal, scale, block_q,
 def flash_sfa_bwd(q_vals, q_idx, k_vals, k_idx, v, o, lse, g, *, d: int,
                   causal: bool = True, scale: float | None = None,
                   block_q: int = 128, block_k: int = 128,
-                  interpret: bool = True, emit: str = "dense",
+                  interpret: bool | None = None, emit: str = "dense",
                   rot_dim: int | None = None):
     """FlashSFA backward. Codes: (bh, n, k); v/o/g: (bh, n, dv); lse: (bh, n).
 
@@ -371,7 +371,7 @@ def flash_sfa_bwd(q_vals, q_idx, k_vals, k_idx, v, o, lse, g, *, d: int,
             f"emit={emit!r}; expected 'dense', 'compact' or 'compact2'")
     return _bwd_impl([q_vals, q_idx], [k_vals, k_idx], v, o, lse, g, d=d,
                      causal=causal, scale=scale, block_q=block_q,
-                     block_k=block_k, interpret=interpret, sparse=True,
+                     block_k=block_k, interpret=resolve_interpret(interpret), sparse=True,
                      emit=emit, rot_dim=rot_dim)
 
 
@@ -379,8 +379,8 @@ def flash_sfa_bwd(q_vals, q_idx, k_vals, k_idx, v, o, lse, g, *, d: int,
     "causal", "scale", "block_q", "block_k", "interpret"))
 def flash_attention_bwd(q, k, v, o, lse, g, *, causal: bool = True,
                         scale: float | None = None, block_q: int = 128,
-                        block_k: int = 128, interpret: bool = True):
+                        block_k: int = 128, interpret: bool | None = None):
     """Dense FlashAttention backward. q/k/v/o/g: (bh, n, d); lse: (bh, n)."""
     return _bwd_impl([q], [k], v, o, lse, g, d=q.shape[-1], causal=causal,
                      scale=scale, block_q=block_q, block_k=block_k,
-                     interpret=interpret, sparse=False)
+                     interpret=resolve_interpret(interpret), sparse=False)

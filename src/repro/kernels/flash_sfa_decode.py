@@ -45,7 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparse import SparseCode, to_feature_major
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 NEG_INF = -1e30
 LANES = 128
@@ -109,7 +109,7 @@ def _decode_kernel(len_ref, q_ref, kv_ref, ki_ref, v_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("d", "scale", "block_n", "interpret"))
 def flash_sfa_decode(q, k_vals, k_idx, v, lengths, *, d: int,
                      scale: float | None = None, block_n: int = 128,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Token-major sparse-cache decode.
 
     q: (bh, d) dense query (one token); k_vals/k_idx: (bh, n_max, k);
@@ -145,7 +145,7 @@ def flash_sfa_decode(q, k_vals, k_idx, v, lengths, *, d: int,
         out_shape=jax.ShapeDtypeStruct((bh, dv), v.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(lengths, jnp.int32), q, k_vals, k_idx, v)
     return out
 
@@ -197,7 +197,7 @@ def _decode_paged_kernel(bt_ref, len_ref, q_ref, kv_ref, ki_ref, v_ref, o_ref,
                                              "interpret"))
 def flash_sfa_decode_paged(q, kv_pool, ki_pool, v_pool, block_tables,
                            lengths, *, d: int, scale: float | None = None,
-                           heads: int = 1, interpret: bool = True):
+                           heads: int = 1, interpret: bool | None = None):
     """Token-major sparse-cache decode over a paged pool.
 
     q: (slots*heads, d) dense query; kv_pool/ki_pool: (hkv, P, page, k)
@@ -246,7 +246,7 @@ def flash_sfa_decode_paged(q, kv_pool, ki_pool, v_pool, block_tables,
         out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
       q, kv_pool, ki_pool, v_pool)
     return out
@@ -297,7 +297,7 @@ def _decode_multi_kernel(len_ref, q_ref, kv_ref, ki_ref, v_ref, o_ref,
                                              "interpret"))
 def flash_sfa_decode_multi(q, k_vals, k_idx, v, lengths, *, d: int,
                            scale: float | None = None, heads: int = 1,
-                           block_n: int = 128, interpret: bool = True):
+                           block_n: int = 128, interpret: bool | None = None):
     """Multi-token verify over ONE slot's token-major sparse cache.
 
     The speculative verify pass scores C = draft_len + 1 query tokens
@@ -348,7 +348,7 @@ def flash_sfa_decode_multi(q, k_vals, k_idx, v, lengths, *, d: int,
         out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(lengths, jnp.int32), q, k_vals, k_idx, v)
     return out
 
@@ -428,7 +428,7 @@ def _decode_fm_kernel(qi_ref, len_ref, qv_ref, kf_ref, v_ref, o_ref,
                                              "interpret"))
 def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
                         scale: float | None = None, block_n: int = 128,
-                        group: int = 1, interpret: bool = True):
+                        group: int = 1, interpret: bool | None = None):
     """Feature-major decode: sparse query gathers k feature rows of the cache.
 
     q_vals/q_idx: (bh, k); k_feat: (bh // group, d, n_max);
@@ -477,7 +477,7 @@ def flash_sfa_decode_fm(q_vals, q_idx, k_feat, v, lengths, *,
         out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(q_idx, jnp.int32), jnp.asarray(lengths, jnp.int32),
       q_vals, k_feat, v)
     return out
@@ -535,7 +535,7 @@ def _decode_fm_paged_kernel(qi_ref, bt_ref, len_ref, qv_ref, kf_ref, v_ref,
 @functools.partial(jax.jit, static_argnames=("scale", "heads", "interpret"))
 def flash_sfa_decode_fm_paged(q_vals, q_idx, kf_pool, v_pool, block_tables,
                               lengths, *, scale: float | None = None,
-                              heads: int = 1, interpret: bool = True):
+                              heads: int = 1, interpret: bool | None = None):
     """Feature-major decode over a paged image pool.
 
     q_vals/q_idx: (slots*heads, k); kf_pool: (hkv, P, d, page) — each pool
@@ -582,7 +582,7 @@ def flash_sfa_decode_fm_paged(q_vals, q_idx, kf_pool, v_pool, block_tables,
         out_shape=jax.ShapeDtypeStruct((bh, dv), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(q_idx, jnp.int32), jnp.asarray(block_tables, jnp.int32),
       jnp.asarray(lengths, jnp.int32), q_vals, kf_pool, v_pool)
     return out

@@ -11,7 +11,8 @@ on (batch, seq, heads, head_dim) activations, matching the signature of
 
   * ``"xla"``     — pure-JAX chunked online-softmax (always available; what
                     the pjit/dry-run path lowers; differentiable).
-  * ``"pallas"``  — Pallas kernels, ``interpret=True`` on CPU (correctness)
+  * ``"pallas"``  — Pallas kernels, interpret-mode on CPU (correctness;
+                    see ``repro.kernels._compat.resolve_interpret``)
                     or compiled on a real TPU. Differentiable end-to-end:
                     the backward is the FlashSFA backward kernel
                     (kernels/flash_sfa_bwd.py) — per-tile score recompute
@@ -47,9 +48,7 @@ from repro.kernels.code_grad import scatter_code_grads
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_sfa import flash_sfa
 from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, pair_closure_indices
-from repro.kernels.rtopk import rtopk
-
-_ON_TPU = jax.default_backend() == "tpu"
+from repro.kernels.rtopk import proj_rtopk, rtopk
 
 
 def fold_heads(x):
@@ -64,18 +63,49 @@ def unfold_heads(x, b, h):
     return jnp.einsum("bhnd->bnhd", x.reshape(b, h, n, d))
 
 
+def fused_qk_codes(x, w, positions, *, h, hkv, hd, sfa_k, rope_spec=None):
+    """Fused q/k code computation: dense q/k never round-trip HBM.
+
+    x: (b, n, m) activations; w: (m, (h + 2·hkv)·hd) packed qkv projection
+    (same layout the unfused seam splits). Each head's projection tile is
+    built, rope'd and top-k-sparsified inside ``proj_rtopk``'s VMEM — the
+    only q/k arrays this function ever touches in HBM are the (n, sfa_k)
+    codes. GQA key codes are computed once at hkv heads and repeated across
+    the group, so group members carry *identical* indices (the invariant the
+    compact backward's dk group-reduction relies on), matching the unfused
+    repeat-KV -> rtopk composition row-for-row.
+
+    Returns (q_vals, q_idx, k_vals, k_idx), each (b·h, n, sfa_k) in the
+    kernels' b-major/h-inner folded layout.
+
+    NOTE tests/test_fused_forward.py greps this function's source to enforce
+    the no-dense-write contract: no rope / head-fold / matmul ops may appear
+    here — only slicing, axis moves and repeats of (n, k)-sized arrays.
+    """
+    b, n, m = x.shape
+    w = w.astype(x.dtype)               # unfused path projects in x.dtype
+    wq = jnp.moveaxis(w[:, :h * hd].reshape(m, h, hd), 1, 0)
+    wk = jnp.moveaxis(w[:, h * hd:(h + hkv) * hd].reshape(m, hkv, hd), 1, 0)
+    qv, qi = proj_rtopk(x, wq, positions, k=sfa_k, rope_spec=rope_spec)
+    kv_, ki = proj_rtopk(x, wk, positions, k=sfa_k, rope_spec=rope_spec)
+    if hkv != h:
+        kv_ = jnp.repeat(kv_, h // hkv, axis=1)
+        ki = jnp.repeat(ki, h // hkv, axis=1)
+    return (qv.reshape(b * h, n, sfa_k), qi.reshape(b * h, n, sfa_k),
+            kv_.reshape(b * h, n, sfa_k), ki.reshape(b * h, n, sfa_k))
+
+
 def _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale, return_residuals=False):
     """Shared primal body: fold -> rtopk -> flash_sfa (-> residuals)."""
     b, n, h, d = q.shape
     qf, kf, vf = fold_heads(q), fold_heads(k), fold_heads(v)
-    qv, qi = rtopk(qf, sfa_k, interpret=not _ON_TPU)
-    kv_, ki = rtopk(kf, sfa_k, interpret=not _ON_TPU)
+    qv, qi = rtopk(qf, sfa_k)
+    kv_, ki = rtopk(kf, sfa_k)
     if not return_residuals:
-        out = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
-                        interpret=not _ON_TPU)
+        out = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale)
         return unfold_heads(out, b, h)
     out, lse = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
-                         interpret=not _ON_TPU, return_residuals=True)
+                         return_residuals=True)
     # The kernel backward needs only the codes + folded v + (out, lse); the
     # dense q/k/v are NOT saved (shapes/dtypes are recoverable from g and
     # the codes), keeping residual memory at the FA2 contract.
@@ -124,15 +154,14 @@ def _sfa_bwd(sfa_k, causal, scale, bwd, emit, res, g):
         # repro/models/attention.py.
         dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
                                       d=d, causal=causal, scale=scale,
-                                      interpret=not _ON_TPU, emit=emit)
+                                      emit=emit)
         qi_s = pair_closure_indices(qi, d) if emit == "compact2" else qi
         ki_s = pair_closure_indices(ki, d) if emit == "compact2" else ki
         dqf = scatter_code_grads(dqc, qi_s, d)
         dkf = scatter_code_grads(dkc, ki_s, d)
     else:
         dqf, dkf, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
-                                      d=d, causal=causal, scale=scale,
-                                      interpret=not _ON_TPU)
+                                      d=d, causal=causal, scale=scale)
     return (unfold_heads(dqf, b, h).astype(qp.dtype),
             unfold_heads(dkf, b, h).astype(kp.dtype),
             unfold_heads(dvf, b, h).astype(vp.dtype))
@@ -170,7 +199,6 @@ def dense_attention_op(q, k, v, *, causal: bool = True,
     if impl == "pallas":
         b, n, h, _ = q.shape
         out = flash_attention(fold_heads(q), fold_heads(k), fold_heads(v),
-                              causal=causal, scale=scale,
-                              interpret=not _ON_TPU)
+                              causal=causal, scale=scale)
         return unfold_heads(out, b, h)
     return att.chunked_attention(q, k, v, causal=causal, scale=scale)

@@ -14,6 +14,22 @@ all kept; ties at the threshold are kept in ascending-index order until k slots
 fill. Slot positions come from a cumulative sum computed as a lower-triangular
 matmul (MXU-friendly prefix sum). Output contract matches
 ``repro.core.sparse.sparsify``: values + ascending int32 indices.
+
+NaN handling: the bit-pattern order isomorphism holds for *ordered* floats
+only — NaN payloads bitcast above the ``0x7F800001`` bisection bound, which
+breaks the ``cnt_geq(hi) < k`` invariant and can leave rows with NaNs holding
+fewer than k real selections. ``_topk_select`` therefore canonicalizes NaNs
+to +0.0 before the search, so the documented contract becomes parity with
+``jax.lax.top_k(|nan_to_zero(x)|)``: NaN entries lose (tie with true zeros at
+magnitude 0) and are emitted as 0.0 if a zero-tie slot picks them. ±Inf,
+subnormals, and ±0 all order correctly through the bit patterns and are moved
+bit-exactly.
+
+``proj_rtopk`` is the fused projection entry (DESIGN.md §2): per (batch,
+head, row-tile) grid step it computes the head projection ``x_tile @ w_h``
+(+ optional RoPE) in VMEM and runs the same top-k selection *in-tile*, so the
+dense (n, d) activation never exists in HBM — only the (n, k) codes are
+written.
 """
 from __future__ import annotations
 
@@ -23,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 
 def _cumsum_rows(x: jax.Array) -> jax.Array:
@@ -39,9 +55,17 @@ def _cumsum_rows(x: jax.Array) -> jax.Array:
     return jax.lax.dot(x, tri, preferred_element_type=jnp.float32)
 
 
-def _rtopk_kernel(x_ref, vals_ref, idx_ref, *, k: int, bits: int = 31):
-    x = x_ref[...].astype(jnp.float32)          # (br, d)
+def _topk_select(x: jax.Array, k: int, *, bits: int = 31):
+    """In-tile top-|k|: x (br, d) f32 -> (vals (br, k) f32, idx (br, k) i32).
+
+    Shared by the standalone rtopk kernel and the fused projection kernel
+    (``proj_rtopk``). Values are moved as int32 bit patterns so the
+    compaction is bit-exact even for subnormals (TPU/XLA float adds
+    flush-to-zero). NaNs are canonicalized to +0.0 up front — see module
+    docstring.
+    """
     br, d = x.shape
+    x = jnp.where(jnp.isnan(x), 0.0, x)
     ax = jnp.abs(x)
     # --- exact integer bisection on IEEE-754 bit patterns ---------------
     axb = jax.lax.bitcast_convert_type(ax, jnp.int32)  # >=0 floats: monotonic
@@ -63,8 +87,6 @@ def _rtopk_kernel(x_ref, vals_ref, idx_ref, *, k: int, bits: int = 31):
     pos = _cumsum_rows(sel.astype(jnp.float32)) - 1.0      # 0-based output slot
     pos = jnp.where(sel, pos, -1.0)
     # --- compaction: k masked reductions (VPU) ---------------------------
-    # Values are moved as int32 bit patterns so the reduction is bit-exact
-    # even for subnormals (TPU/XLA float adds flush-to-zero).
     iota_d = jax.lax.broadcasted_iota(jnp.int32, (br, d), 1)
     xb = jax.lax.bitcast_convert_type(x, jnp.int32)
     vals_out = []
@@ -74,18 +96,29 @@ def _rtopk_kernel(x_ref, vals_ref, idx_ref, *, k: int, bits: int = 31):
         vals_out.append(jnp.sum(jnp.where(at_j, xb, 0), axis=-1))
         idx_out.append(jnp.sum(jnp.where(at_j, iota_d, 0), axis=-1))
     vals_bits = jnp.stack(vals_out, axis=-1)
-    vals_ref[...] = jax.lax.bitcast_convert_type(
-        vals_bits, jnp.float32).astype(vals_ref.dtype)
-    idx_ref[...] = jnp.stack(idx_out, axis=-1).astype(jnp.int32)
+    vals = jax.lax.bitcast_convert_type(vals_bits, jnp.float32)
+    idx = jnp.stack(idx_out, axis=-1).astype(jnp.int32)
+    return vals, idx
+
+
+def _rtopk_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)          # (br, d)
+    vals, idx = _topk_select(x, k)
+    vals_ref[...] = vals.astype(vals_ref.dtype)
+    idx_ref[...] = idx
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
-def rtopk(x: jax.Array, k: int, *, block_rows: int = 256, interpret: bool = True):
+def rtopk(x: jax.Array, k: int, *, block_rows: int = 256,
+          interpret: bool | None = None):
     """Row-wise top-k by magnitude. x: (..., d) -> (values (...,k), idx (...,k)).
 
     Indices ascending per row; exact match with jax.lax.top_k(|x|) + index sort
-    (ties keep lowest indices — both contracts agree; asserted in tests).
+    for NaN-free rows (ties keep lowest indices — both contracts agree;
+    asserted in tests). Rows containing NaNs follow the canonicalized contract
+    ``jax.lax.top_k(|nan_to_zero(x)|)`` — see module docstring.
     """
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     d = orig_shape[-1]
     assert k <= d, (k, d)
@@ -116,3 +149,109 @@ def rtopk(x: jax.Array, k: int, *, block_rows: int = 256, interpret: bool = True
     vals = vals[:rows].reshape(*orig_shape[:-1], k)
     idx = idx[:rows].reshape(*orig_shape[:-1], k)
     return vals, idx
+
+
+def _rope_tile(y: jax.Array, pos: jax.Array, theta: float, rot: int,
+               dt) -> jax.Array:
+    """RoPE on one (br, d) projection tile — same op sequence as
+    ``models.layers.rope`` (elementwise, so the fused forward stays parity-
+    exact with the unfused projection -> rope -> rtopk composition)."""
+    br, d = y.shape
+    y = y.astype(dt)                               # unfused path ropes dt acts
+    # iota, not jnp.arange: arange would be a captured trace-time constant,
+    # which pallas kernels reject.
+    half = jax.lax.broadcasted_iota(jnp.float32, (1, rot // 2), 1)
+    freqs = theta ** (-(2.0 * half) / rot)
+    ang = pos[:, None].astype(jnp.float32) * freqs          # (br, rot/2)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    pairs = y[:, :rot].astype(jnp.float32).reshape(br, rot // 2, 2)
+    x1 = pairs[:, :, 0]
+    x2 = pairs[:, :, 1]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(br, rot)
+    if rot < d:
+        rotated = jnp.concatenate(
+            [rotated, y[:, rot:].astype(jnp.float32)], axis=-1)
+    return rotated.astype(dt)
+
+
+def _proj_rtopk_kernel(x_ref, w_ref, *rest, k: int, rope_spec):
+    if rope_spec is None:
+        pos_ref = None
+        vals_ref, idx_ref = rest
+    else:
+        pos_ref, vals_ref, idx_ref = rest
+    dt = vals_ref.dtype
+    xt = x_ref[0].astype(jnp.float32)              # (bn, m)
+    wt = w_ref[0].astype(jnp.float32)              # (m, d)
+    y = jax.lax.dot_general(xt, wt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y.astype(dt)                               # quantize like `x @ w`
+    if rope_spec is not None:
+        theta, rot = rope_spec
+        y = _rope_tile(y, pos_ref[0], theta, rot, dt)
+    vals, idx = _topk_select(y.astype(jnp.float32), k)
+    vals_ref[0, 0] = vals.astype(dt)
+    idx_ref[0, 0] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rope_spec", "block_n",
+                                             "interpret"))
+def proj_rtopk(x: jax.Array, w_heads: jax.Array, positions=None, *, k: int,
+               rope_spec=None, block_n: int = 128,
+               interpret: bool | None = None):
+    """Fused head projection -> [RoPE] -> top-k: codes only, no dense HBM y.
+
+    x: (b, n, m) activations; w_heads: (H, m, d) per-head projection blocks;
+    positions: (b, n) int32 (required when ``rope_spec=(theta, rot_dim)`` is
+    set). Per grid step one (block_n, d) projection tile is built and
+    sparsified entirely in VMEM; HBM sees only the (b, H, n, k) values +
+    indices — the fused-forward seam's write contract (DESIGN.md §2).
+
+    Returns (vals (b, H, n, k) in x.dtype, idx (b, H, n, k) int32), matching
+    ``rtopk(rope(x @ w_h))`` row-for-row.
+    """
+    interpret = resolve_interpret(interpret)
+    b, n, m = x.shape
+    nh, m2, d = w_heads.shape
+    assert m2 == m, (w_heads.shape, x.shape)
+    assert k <= d, (k, d)
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    np_ = n + pad
+    grid = (b, nh, np_ // block_n)
+    in_specs = [
+        pl.BlockSpec((1, block_n, m), lambda bb, hh, ii: (bb, ii, 0)),
+        pl.BlockSpec((1, m, d), lambda bb, hh, ii: (hh, 0, 0)),
+    ]
+    operands = [x, w_heads]
+    if rope_spec is not None:
+        assert positions is not None, "rope_spec needs positions"
+        pos = jnp.broadcast_to(positions, (b, n)).astype(jnp.int32)
+        if pad:
+            pos = jnp.pad(pos, ((0, 0), (0, pad)))
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda bb, hh, ii: (bb, ii)))
+        operands.append(pos)
+    vals, idx = pl.pallas_call(
+        functools.partial(_proj_rtopk_kernel, k=k, rope_spec=rope_spec),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, block_n, k),
+                         lambda bb, hh, ii: (bb, hh, ii, 0)),
+            pl.BlockSpec((1, 1, block_n, k),
+                         lambda bb, hh, ii: (bb, hh, ii, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, np_, k), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, np_, k), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(*operands)
+    return vals[:, :, :n], idx[:, :, :n]

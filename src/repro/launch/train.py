@@ -45,6 +45,14 @@ def main():
                          "(rope'd layers auto-widen to the (n, 2k) pair-"
                          "closure emit); compact2 = force the pair-widened "
                          "emit everywhere (parity/bench surface)")
+    ap.add_argument("--fwd-fuse", dest="fwd_fuse", action="store_true",
+                    default=None,
+                    help="force the fused forward on seam-eligible layers: "
+                         "projection -> rope -> top-k in one kernel (no "
+                         "dense q/k HBM round-trip) + FlashSFA block "
+                         "skipping (DESIGN.md §2; config default: on)")
+    ap.add_argument("--no-fwd-fuse", dest="fwd_fuse", action="store_false",
+                    help="force the unfused rtopk+FlashSFA composition")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -65,7 +73,8 @@ def main():
                           global_batch=args.batch)
         step = jax.jit(
             make_train_step(cfg, ocfg, attn_backend=args.attn_backend,
-                            bwd_emit=args.bwd_emit),
+                            bwd_emit=args.bwd_emit,
+                            fwd_fuse=args.fwd_fuse),
             in_shardings=(sh(pspec),
                           sh(type(opt)(step=P(), m=pspec, v=pspec)),
                           None),

@@ -53,8 +53,9 @@ from repro.distributed.sharding import axis_size, constrain
 from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, pair_closure_indices
 from repro.kernels.flash_sfa_decode import LANES as _FM_TILE, \
     feature_major_prefill
+from repro.kernels.flash_sfa import flash_sfa
 from repro.kernels.ops import (
-    _ON_TPU, _sfa_pallas_fwd, fold_heads,
+    _sfa_pallas_fwd, fold_heads, fused_qk_codes, unfold_heads,
 )
 from repro.models.backends import (
     AttentionRequest, DecodeQuery, expand_kv as _expand_kv, get_backend,
@@ -215,6 +216,7 @@ class CompactSeamReport:
     where: str
     taken: bool
     reason: Optional[str] = None     # set when the seam was NOT taken
+    fused_fwd: bool = False          # taken seam ran the fused forward path
 
 
 _SEAM_REPORTS: dict = {}
@@ -229,20 +231,39 @@ def clear_compact_seam_reports() -> None:
     _SEAM_REPORTS.clear()
 
 
-def _record_seam(where: str, taken: bool, reason: Optional[str]) -> None:
-    key = (where, taken, reason)
+def _record_seam(where: str, taken: bool, reason: Optional[str],
+                 fused_fwd: bool = False) -> None:
+    key = (where, taken, reason, fused_fwd)
     if key not in _SEAM_REPORTS:
         _SEAM_REPORTS[key] = CompactSeamReport(where=where, taken=taken,
-                                               reason=reason)
+                                               reason=reason,
+                                               fused_fwd=fused_fwd)
 
 
 def _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k, causal,
-                              scale, rope_spec):
+                              scale, rope_spec, fwd_fuse=False):
     """Primal: qkv projection [-> rope] -> GQA expand -> ops.py's pallas
     primal (one source of truth for the rtopk -> FlashSFA dispatch).
-    rope_spec: None, or the static ``(theta, rot_dim)`` pair."""
+    rope_spec: None, or the static ``(theta, rot_dim)`` pair.
+
+    With ``fwd_fuse`` the q/k side runs ``ops.fused_qk_codes`` (projection ->
+    RoPE -> top-k entirely in VMEM, only the (n, k) codes written to HBM) and
+    FlashSFA runs with overlap-aware block skipping — same outputs, and the
+    *identical* residual tuple, so the compact backward below is untouched.
+    V stays a dense projection either way: the kernel streams it in full."""
     b, n, _ = x.shape
     dt = x.dtype
+    if fwd_fuse:
+        qv, qi, kv_, ki = fused_qk_codes(x, w, positions, h=h, hkv=hkv,
+                                         hd=hd, sfa_k=sfa_k,
+                                         rope_spec=rope_spec)
+        wv = w[:, (h + hkv) * hd:].astype(dt)
+        vf = fold_heads(_expand_kv((x @ wv).reshape(b, n, hkv, hd), h))
+        out, lse = flash_sfa(qv, qi, kv_, ki, vf, d=hd, causal=causal,
+                             scale=scale, return_residuals=True,
+                             block_skip=True)
+        return (unfold_heads(out, b, h),
+                (x, w, positions, qv, qi, kv_, ki, vf, out, lse))
     qkv = x @ w.astype(dt)
     q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
     q = q.reshape(b, n, h, hd)
@@ -258,9 +279,10 @@ def _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k, causal,
     return out, (x, w, positions) + res
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
 def _sfa_proj_attend_compact(w, x, positions, h, hkv, hd, sfa_k, causal,
-                             scale, rope_spec, req_emit):
+                             scale, rope_spec, req_emit, fwd_fuse):
     """Fused QKV-projection [+ RoPE] + SFA attention, compact-code backward.
 
     Forward is exactly the pallas train path (projection [-> rope] -> rtopk
@@ -276,30 +298,32 @@ def _sfa_proj_attend_compact(w, x, positions, h, hkv, hd, sfa_k, causal,
     contract, tests/test_code_grad.py + tests/test_rope_seam.py).
     """
     out, _ = _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k,
-                                       causal, scale, rope_spec)
+                                       causal, scale, rope_spec, fwd_fuse)
     return out
 
 
 def _sfa_proj_attend_fwd(w, x, positions, h, hkv, hd, sfa_k, causal, scale,
-                         rope_spec, req_emit):
+                         rope_spec, req_emit, fwd_fuse):
     return _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k,
-                                     causal, scale, rope_spec)
+                                     causal, scale, rope_spec, fwd_fuse)
 
 
 def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, rope_spec,
-                         req_emit, res, g):
+                         req_emit, fwd_fuse, res, g):
+    # fwd_fuse changes only how the residual codes were produced, not their
+    # layout — the compact backward is byte-for-byte the same seam.
+    del fwd_fuse
     x, w, positions, qv, qi, kv_, ki, vf, out, lse = res
     b, n, _, _ = g.shape
     m = x.shape[-1]
     group = h // hkv
-    interp = not _ON_TPU
     gf = fold_heads(g)
     pair_widen = rope_spec is not None or req_emit == "compact2"
     emit = "compact2" if pair_widen else "compact"
     rot = hd if rope_spec is None else rope_spec[1]
     dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf, d=hd,
-                                  causal=causal, scale=scale,
-                                  interpret=interp, emit=emit, rot_dim=rot)
+                                  causal=causal, scale=scale, emit=emit,
+                                  rot_dim=rot)
     if not pair_widen:
         qi_c, ki_c = qi, ki
     else:
@@ -337,10 +361,8 @@ def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, rope_spec,
     wk_heads = jnp.moveaxis(
         w[:, h * hd:(h + hkv) * hd].reshape(m, hkv, hd), 1, 0)
     wv = w[:, (h + hkv) * hd:]
-    dx_q, dwq = sparse_proj_bwd(x_flat, wq_heads, dq_vals, dq_idx, d=hd,
-                                interpret=interp)
-    dx_k, dwk = sparse_proj_bwd(x_flat, wk_heads, dk_vals, dk_idx, d=hd,
-                                interpret=interp)
+    dx_q, dwq = sparse_proj_bwd(x_flat, wq_heads, dq_vals, dq_idx, d=hd)
+    dx_k, dwk = sparse_proj_bwd(x_flat, wk_heads, dk_vals, dk_idx, d=hd)
     dv32 = dv_flat.astype(jnp.float32)
     dx_v = dv32 @ wv.astype(jnp.float32).T
     dwv = x_flat.astype(jnp.float32).T @ dv32
@@ -512,7 +534,8 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
             # the kernels' compact code-gradients directly — (n, k), or the
             # (n, 2k) pair closure rotated through rope_code_vjp on rope'd
             # layers — no dense dQ/dK round-trip (DESIGN.md §3)
-            _record_seam(f"{cfg.name}/attention", True, None)
+            _record_seam(f"{cfg.name}/attention", True, None,
+                         fused_fwd=a.fwd_fuse)
             if a.rope:
                 pos = (positions if positions is not None
                        else jnp.arange(n)[None, :])
@@ -522,7 +545,8 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
                 rope_spec = None
             o = _sfa_proj_attend_compact(params["w_qkv"]["w"], x, pos, h,
                                          hkv, hd, a.sfa_k, a.causal,
-                                         hd ** -0.5, rope_spec, a.bwd_emit)
+                                         hd ** -0.5, rope_spec, a.bwd_emit,
+                                         a.fwd_fuse)
             out = dense(params["w_o"], o.reshape(b, n, h * hd).astype(dt), dt)
             return AttentionOut(out, None)
         _record_seam(f"{cfg.name}/attention", False, reason)

@@ -425,7 +425,7 @@ class PallasBackend(AttentionBackend):
             o = flash_sfa_decode_paged(
                 qs.reshape(b * h, d), kv_p, ki_p, cache.v,
                 cache.block_table, lengths + 1, d=d, scale=scale,
-                heads=h, interpret=not _ON_TPU)
+                heads=h)
             return o.reshape(b, h, -1)
         kv_c, ki_c = cache.k_vals, unpack_indices(cache.k_idx)
         if draft_k:
@@ -437,8 +437,7 @@ class PallasBackend(AttentionBackend):
         vf = _fold_expand(cache.v, h).astype(jnp.float32)
         lens = jnp.repeat(lengths + 1, h)                    # incl. new token
         o = flash_sfa_decode(qs.reshape(b * h, d), kv, ki, vf,
-                             lens, d=d, scale=scale,
-                             interpret=not _ON_TPU)
+                             lens, d=d, scale=scale)
         return o.reshape(b, h, -1)
 
     def verify(self, query: DecodeQuery, cache: SparseKV, lengths, *,
@@ -457,7 +456,7 @@ class PallasBackend(AttentionBackend):
         lens = jnp.repeat(jnp.asarray(lengths, jnp.int32) + 1, h)
         o = flash_sfa_decode_multi(qs.reshape(cq * h, d), kv, ki, vf, lens,
                                    d=d, scale=scale, heads=h,
-                                   block_n=block_n, interpret=not _ON_TPU)
+                                   block_n=block_n)
         return o.reshape(cq, h, -1)
 
 
@@ -556,7 +555,7 @@ class PallasFMBackend(AttentionBackend):
                     g.k_feat.reshape(s_ * hkv_, d_, n_), sfa_k)
             o = flash_sfa_decode_fm_paged(
                 qv, qi, cache.k_feat, cache.v, cache.block_table,
-                lengths + 1, scale=scale, heads=h, interpret=not _ON_TPU)
+                lengths + 1, scale=scale, heads=h)
             return o.reshape(b, h, -1)
         hkv, nmax = cache.k_feat.shape[1], cache.k_feat.shape[-1]
         # zero per-step copies: both cache leaves are stored kernel-native
@@ -570,7 +569,7 @@ class PallasFMBackend(AttentionBackend):
         vf = cache.v.reshape(b * hkv, nmax, -1)
         lens = jnp.repeat(lengths + 1, h)
         o = flash_sfa_decode_fm(qv, qi, kfeat, vf, lens, scale=scale,
-                                group=h // hkv, interpret=not _ON_TPU)
+                                group=h // hkv)
         return o.reshape(b, h, -1)
 
 

@@ -30,7 +30,7 @@ def dense(params, x, dtype=None):
 
 
 def sparse_proj_bwd(x, w_heads, g_vals, g_idx, *, d: int,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Backward of a head-blocked projection ``y_h = x @ w_h`` whose upstream
     cotangent arrives as compact (n, k) code-gradients (DESIGN.md §3).
 

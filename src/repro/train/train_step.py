@@ -34,7 +34,8 @@ from repro.optim import OptimizerConfig, make_optimizer
 
 
 def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str],
-                           bwd_emit: Optional[str] = None):
+                           bwd_emit: Optional[str] = None,
+                           fwd_fuse: Optional[bool] = None):
     if cfg.attention is None:
         return cfg
     updates = {}
@@ -42,6 +43,8 @@ def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str],
         updates["backend"] = attn_backend
     if bwd_emit is not None:
         updates["bwd_emit"] = bwd_emit
+    if fwd_fuse is not None:
+        updates["fwd_fuse"] = fwd_fuse
     if not updates:
         return cfg
     return dataclasses.replace(
@@ -52,8 +55,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                     accum_steps: int = 1,
                     grad_compression: Optional[float] = None,
                     attn_backend: Optional[str] = None,
-                    bwd_emit: Optional[str] = None):
-    cfg = _override_attn_backend(cfg, attn_backend, bwd_emit)
+                    bwd_emit: Optional[str] = None,
+                    fwd_fuse: Optional[bool] = None):
+    cfg = _override_attn_backend(cfg, attn_backend, bwd_emit, fwd_fuse)
     update = make_optimizer(opt_cfg)
 
     def compute_grads(params, batch):

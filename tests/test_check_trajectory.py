@@ -92,6 +92,51 @@ def test_missing_row_kind_fails():
     assert any("decode" in p and "missing" in p for p in probs)
 
 
+def test_fwd_rows_gate_like_other_kinds():
+    """ISSUE 8: fused-forward rows key as ('fwd', d, k), gate
+    byte_ratio_fused (higher) and write_B_fused (per-token, lower); the
+    data-dependent block-skip fractions and wall-clock are reported only."""
+    key, fields = ct.gated_fields(
+        "fwd_n128_d64_k8",
+        "fused_us=500;unfused_us=700;byte_ratio_fused=2.33;"
+        "write_B_fused=49152;skip_frac=0.25;overlap_skip_frac=0.0;"
+        "fetch_frac=1.0;tpu_model_speedup_fused=1.9")
+    assert key == ("fwd", 64, 8)
+    assert fields["byte_ratio_fused"] == ("higher", 2.33)
+    assert fields["write_B_fused"] == ("lower", 49152 / 128)
+    for ungated in ("fused_us", "unfused_us", "skip_frac",
+                    "overlap_skip_frac", "fetch_frac",
+                    "tpu_model_speedup_fused"):
+        assert ungated not in fields
+    base = [_row("fwd_n256_d64_k8",
+                 "byte_ratio_fused=2.33;write_B_fused=98304")]
+    ok = [_row("fwd_n128_d64_k8",
+               "byte_ratio_fused=2.33;write_B_fused=49152")]
+    assert ct.compare(base, ok, tol=0.02) == []
+    worse = [_row("fwd_n128_d64_k8",
+                  "byte_ratio_fused=2.0;write_B_fused=61440")]
+    probs = ct.compare(base, worse, tol=0.02)
+    assert any("byte_ratio_fused regressed" in p for p in probs)
+    assert any("write_B_fused regressed" in p for p in probs)
+
+
+def test_uncovered_snapshot_keys_are_reported():
+    """ISSUE 8: a snapshot key the smoke sweep stops covering must surface —
+    main() turns each into a FAIL, so a shrunken sweep cannot silently
+    un-gate committed rows."""
+    new = [_row("attn_bwd_n128_d64_k8",
+                "byte_ratio=1.42;byte_ratio_compact=1.89;"
+                "write_B_dense=49152;write_B_compact=20480"),
+           _row("decode_n128_d64_k8", "byte_ratio=1.68")]
+    assert ct.uncovered_keys(BASE, new) == []
+    dropped = new[:1]                        # decode rows vanish from smoke
+    assert ct.uncovered_keys(BASE, dropped) == [("decode", 64, 8)]
+    # coverage is key-level, not kind-level: same kind at another (d, k)
+    # does NOT cover the committed point
+    moved = new[:1] + [_row("decode_n128_d128_k16", "byte_ratio=1.7")]
+    assert ct.uncovered_keys(BASE, moved) == [("decode", 64, 8)]
+
+
 SERVE_BASE = [
     _row("serve_mixed_slot",
          "tok_per_step=3.909;p50_steps=6.5;p99_steps=11.0;util=0.2708;"
@@ -154,7 +199,7 @@ def test_gate_passes_against_committed_snapshot_schema():
     indexed = ct.index_rows(rows)
     assert indexed, "committed snapshot produced no gated rows"
     kinds = {k[0] for k in indexed}
-    assert {"attn", "attn_bwd", "decode"} <= kinds
+    assert {"attn", "attn_bwd", "fwd", "decode"} <= kinds
     # self-comparison is a fixed point of the gate
     assert ct.compare(rows, rows, tol=0.0) == []
     spath = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"

@@ -42,6 +42,31 @@ def test_rtopk_adversarial_ties_and_range():
         np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
 
 
+def test_rtopk_nonfinite_rows_match_nan_to_zero_oracle():
+    """ISSUE 8 bugfix pin: the bisection threshold search treated NaN
+    magnitudes as +Inf-like (NaN comparisons are False on both sides), so a
+    single NaN could starve the count and emit garbage indices. The kernel
+    now canonicalizes NaN -> 0 before |x|; the contract is exact parity with
+    ``top_k(|nan_to_zero(x)|)``. Rows cover: mixed NaN, all-NaN, +/-Inf
+    alongside finite, subnormals (5e-39 < f32 min normal), and +/-0 ties."""
+    sub = 5e-39                       # subnormal: flushes in f32 math paths
+    x = jnp.array([
+        [jnp.nan, 1., -2., jnp.nan, 3., 0., -1., 0.5],
+        [jnp.nan] * 8,
+        [jnp.inf, -jnp.inf, 1., jnp.nan, -2., sub, 0., 4.],
+        [sub, -sub, sub, 0., -0., sub, -sub, 0.],
+        [-0., 0., -0., 0., 1., -1., jnp.nan, jnp.inf],
+    ])
+    oracle_in = jnp.where(jnp.isnan(x), 0.0, x)
+    for k in (2, 4, 8):
+        v1, i1 = rtopk(x, k, block_rows=4)
+        v2, i2 = REF.rtopk_ref(oracle_in, k)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        # selected values are NaN-free by construction
+        assert not np.isnan(np.asarray(v1)).any()
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rtopk_dtypes(rng, dtype):
     x = jax.random.normal(rng, (64, 128)).astype(dtype)

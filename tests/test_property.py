@@ -196,3 +196,49 @@ def test_sfa_attention_rowstochastic(seed, k):
     from repro.core import sfa_attention
     o = sfa_attention(q, kk, v, sfa_k=min(k, D), materialize=True)
     np.testing.assert_allclose(np.asarray(o), 1.0, atol=1e-4)
+
+
+@st.composite
+def code_block(draw):
+    """Codes with adversarial index patterns: duplicates, all-same, padded
+    (idx=0 x k, val=0) rows — everything ``_densify_block`` must handle."""
+    rows = draw(st.integers(1, 8))
+    k = draw(st.sampled_from([2, 4, 8]))
+    d = draw(st.sampled_from([16, 32, 64]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    key = jax.random.PRNGKey(seed)
+    vals = np.array(jax.random.normal(jax.random.fold_in(key, 0), (rows, k)),
+                    copy=True)
+    mode = draw(st.sampled_from(["random", "dups", "allsame"]))
+    if mode == "random":
+        idx = np.array(jax.random.randint(jax.random.fold_in(key, 1),
+                                          (rows, k), 0, d))
+    elif mode == "dups":
+        base = np.array(jax.random.randint(jax.random.fold_in(key, 1),
+                                           (rows, k), 0, max(2, d // 4)))
+        idx = np.sort(base, axis=-1)
+    else:
+        idx = np.full((rows, k), draw(st.integers(0, d - 1)))
+    if draw(st.booleans()):         # forge a canonical padded row
+        vals[0] = 0.0
+        idx[0] = np.arange(k) % d if mode == "random" else idx[0]
+    return jnp.asarray(vals, jnp.float32), jnp.asarray(idx, jnp.int32), d
+
+
+@given(code_block())
+def test_densify_block_duplicate_indices_sum(code):
+    """ISSUE 8 audit pin: the in-kernel one-hot densify used by BOTH the
+    FlashSFA tile loop and the fused proj->topk forward must SUM duplicate
+    indices (scatter-add semantics), never last-write-wins — rtopk cannot
+    emit duplicates, but the kernel contract must not silently depend on
+    that upstream invariant."""
+    from repro.kernels.flash_sfa import _densify_block
+    vals, idx, d = code
+    dense = np.asarray(_densify_block(vals, idx, d))
+    oracle = np.zeros((vals.shape[0], d), np.float32)
+    for r in range(vals.shape[0]):
+        np.add.at(oracle[r], np.asarray(idx[r]), np.asarray(vals[r]))
+    np.testing.assert_allclose(dense, oracle, atol=1e-6)
+    # canonical padded rows (val=0 everywhere) densify to exact zeros
+    zero_rows = np.asarray((vals == 0).all(axis=-1))
+    assert (dense[zero_rows] == 0.0).all()
