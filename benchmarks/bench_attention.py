@@ -34,6 +34,8 @@ import jax.numpy as jnp
 
 from repro.core.kv_cache import idx_bytes
 from repro.core.sparse import SparseCode, to_feature_major
+from repro.distributed.ring import (ring_byte_ratio, ring_bytes_per_hop,
+                                    ring_dense_bytes_per_hop)
 from repro.kernels.ref import rtopk_ref
 from repro.kernels import (flash_sfa, flash_sfa_bwd, flash_attention,
                            flash_attention_bwd)
@@ -171,9 +173,22 @@ def run(quick: bool = True, smoke: bool = False):
                             dense_bytes(n, d, d) / HBM_BW) * 1e6
             tpu_sfa = max(attn_flops(n, d, d) / PEAK_FLOPS,
                           sfa_bytes(n, d, k, d) / HBM_BW) * 1e6
+            # comms corollary of the same (d, k) point (DESIGN.md §9): in
+            # ring/context parallelism the per-hop K payload is (n/P, k)
+            # codes instead of (n/P, d) dense rows. The ratio is analytic
+            # and n-invariant (gated, absolute floor d/(2k)*0.8 in
+            # check_trajectory.py); the per-hop byte totals are quoted per
+            # (bh=1, n) shard for scale. bench_ring.py asserts the REALIZED
+            # collective-permute bytes of the compiled ring against the
+            # same model on the live multi-device mesh.
+            ring_br = ring_byte_ratio(d, k)
             rows.append((f"attn_n{n}_d{d}_k{k}", t_sfa,
                          f"dense_us={t_dense:.0f};byte_ratio={br:.2f};"
-                         f"tpu_model_speedup={tpu_dense / tpu_sfa:.2f}"))
+                         f"tpu_model_speedup={tpu_dense / tpu_sfa:.2f};"
+                         f"ring_byte_ratio={ring_br:.2f};"
+                         f"ring_hop_B_code={ring_bytes_per_hop(1, n, k, d)};"
+                         f"ring_hop_B_dense="
+                         f"{ring_dense_bytes_per_hop(1, n, d, d)}"))
             # fused forward (DESIGN.md §2): projection -> top-k in one
             # kernel (codes are the only q/k HBM writes) + FlashSFA with
             # overlap-aware block skipping. block 64 keeps the tile grid

@@ -37,6 +37,18 @@ timing is trend-only noise), and neither are ``tpu_model_speedup*`` fields:
 the roofline max(flops, bytes) crosses over with n, so they are NOT
 n-invariant and a (kind, d, k) key cannot gate them honestly.
 
+Ring rows (``BENCH_ring.json``, ``ring_n*_d*_k*``) gate the comms
+trajectory the same way: the n-invariant ``ring_byte_ratio`` (code-payload
+vs dense-K ring bytes per hop, analytically d/(2k)) is gated
+higher-is-better AND against an absolute floor of d/(2k)·0.8 that no
+snapshot regeneration can lower (``RING_FLOOR_FRAC``; the floor also
+covers the ``attn_*`` rows' analytic ring corollary fields). The realized
+collective-permute bytes == analytic-model asserts fire inside
+``bench_ring.run()`` itself, which needs >= 2 emulated devices — on a
+single-device lane the ring suite yields no rows and its gate is skipped
+(the multi-device CI lane, XLA_FLAGS=--xla_force_host_platform_device_
+count=8, is where these keys are enforced).
+
 Serving rows (``BENCH_serving.json``, ``serve_<mix>_<engine>``) gate the
 same way with their own field set: tokens/step, p50/p99 latency in engine
 ticks, and cache utilization — deterministic scheduling metrics (greedy,
@@ -58,7 +70,8 @@ import pathlib
 import re
 
 ROW_RE = re.compile(
-    r"^(?P<kind>attn_bwd|attn|fwd|decode)_n(?P<n>\d+)_d(?P<d>\d+)_k(?P<k>\d+)$")
+    r"^(?P<kind>attn_bwd|attn|fwd|decode|ring)"
+    r"_n(?P<n>\d+)_d(?P<d>\d+)_k(?P<k>\d+)$")
 
 # serving rows are keyed by traffic mix + engine; their gated fields are
 # deterministic scheduling metrics (greedy decode, eos_id=-1: termination
@@ -73,7 +86,18 @@ SERVE_ROW_RE = re.compile(r"^serve_(?P<mix>[a-z]+)_(?P<engine>[a-z0-9_]+)$")
 GATES = (
     ("byte_ratio", "higher", False),
     ("write_B", "lower", True),
+    # ring comms: dense-K / code-K payload ratio per hop (analytic, exactly
+    # d/(2k) at matched value/index widths — n-invariant by construction).
+    # "ring_hop_B*" / "wire_*" stay ungated: linear in n (the realized ==
+    # analytic asserts inside bench_ring.run() already pin them exactly).
+    ("ring_byte_ratio", "higher", False),
 )
+
+# absolute floor for the ring payload ratio (acceptance bar on top of the
+# relative trajectory gate): index-width or payload-layout changes may not
+# erode the paper's comms corollary below 80% of the d/(2k) ideal — not
+# even with a regenerated snapshot.
+RING_FLOOR_FRAC = 0.8
 
 # serving gates: wall-clock fields (*_us, toks_per_s_wall) are never
 # gated; steps/tokens counts are covered through tok_per_step. spec_*
@@ -200,6 +224,32 @@ def spec_floor_problems(rows) -> list[str]:
     return problems
 
 
+def ring_floor_problems(rows) -> list[str]:
+    """Absolute floor on the ring payload ratio: every row carrying a
+    ``ring_byte_ratio`` field (the ``ring_*`` suite rows AND the ``attn_*``
+    rows' analytic corollary) must keep >= ``RING_FLOOR_FRAC`` of the
+    d/(2k) ideal at its own (d, k) point. Unlike the relative gates this
+    cannot be reset by regenerating the snapshot — it is the acceptance
+    bar for the code-payload ring's comms advantage itself."""
+    problems = []
+    for r in rows:
+        m = ROW_RE.match(r["name"])
+        if m is None:
+            continue
+        val = parse_derived(r["derived"]).get("ring_byte_ratio")
+        if not isinstance(val, float):
+            continue
+        d, k = int(m.group("d")), int(m.group("k"))
+        floor = d / (2 * k) * RING_FLOOR_FRAC
+        if val < floor:
+            problems.append(
+                f"{r['name']}: ring_byte_ratio={val:.2f} is below the "
+                f"absolute floor d/(2k)*{RING_FLOOR_FRAC}={floor:.2f} — "
+                f"the code-payload ring lost its comms advantage over the "
+                f"dense ring")
+    return problems
+
+
 def uncovered_keys(baseline_rows, new_rows) -> list:
     """Snapshot keys the new (smoke) run does not gate — these FAIL: every
     committed key must stay covered, else a regression could hide behind a
@@ -223,6 +273,8 @@ def main() -> None:
                     default=root / "BENCH_attention.json")
     ap.add_argument("--serving-baseline", type=pathlib.Path,
                     default=root / "BENCH_serving.json")
+    ap.add_argument("--ring-baseline", type=pathlib.Path,
+                    default=root / "BENCH_ring.json")
     ap.add_argument("--entry", type=int, default=-1,
                     help="which snapshot to gate against (default: last)")
     ap.add_argument("--tol", type=float, default=0.02,
@@ -230,10 +282,11 @@ def main() -> None:
     args = ap.parse_args()
 
     try:
-        from benchmarks import bench_attention, bench_serving
+        from benchmarks import bench_attention, bench_serving, bench_ring
     except ImportError:
         import bench_attention
         import bench_serving
+        import bench_ring
 
     problems = []
     print("name,us_per_call,derived")
@@ -244,15 +297,30 @@ def main() -> None:
         print(f"note: {args.serving_baseline.name} absent — serving rows "
               f"ungated (seed with `python -m benchmarks.run "
               f"--only serving`)")
+    if args.ring_baseline.exists():
+        suites.append(("ring", bench_ring, args.ring_baseline))
+    else:
+        print(f"note: {args.ring_baseline.name} absent — ring rows ungated "
+              f"(seed with XLA_FLAGS=--xla_force_host_platform_device_"
+              f"count=8 `python -m benchmarks.run --only ring`)")
     for suite, mod, base_path in suites:
         baseline = load_baseline(base_path, args.entry)
         # echo the smoke rows: this step doubles as the CI bench smoke
         # (the attention realized==analytic asserts fired inside run())
         raw = mod.run(quick=True, smoke=True)
+        if suite == "ring" and not raw:
+            # bench_ring returns no rows on a single device: the ring gate
+            # only bites on the multi-device CI lane (which exports
+            # XLA_FLAGS=--xla_force_host_platform_device_count=8) — do NOT
+            # fail the uncovered-key check on lanes that cannot ring.
+            print("trajectory gate [ring]: skipped — single device "
+                  "(multi-device lane gates these keys)")
+            continue
         for r in raw:
             print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
         rows = [{"name": r[0], "derived": r[2]} for r in raw]
         problems += compare(baseline, rows, tol=args.tol)
+        problems += ring_floor_problems(rows)
         if suite == "serving":
             problems += spec_floor_problems(rows)
         gated = index_rows(rows)

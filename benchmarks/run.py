@@ -11,11 +11,17 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
     bench_niah       -> Table 2 / Appendix K (NIAH accuracy & generalization)
     bench_serving    -> beyond-paper: paged-KV serving engine vs slot engine
                         (Poisson traffic, same byte budget)
+    bench_ring       -> beyond-paper: Ring-SFA code-payload context
+                        parallelism — realized collective-permute bytes vs
+                        the analytic per-hop model (needs multi-device:
+                        XLA_FLAGS=--xla_force_host_platform_device_count=8)
 
-The attention and serving suites additionally append a snapshot (rows with
-their analytic byte models / deterministic scheduling metrics, git SHA,
+The attention, serving and ring suites additionally append a snapshot (rows
+with their analytic byte models / deterministic scheduling metrics, git SHA,
 UTC timestamp) to ``BENCH_<suite>.json`` at the repo root, so the perf
 trajectory accumulates run over run instead of scrolling away in CI logs.
+A suite that produces no rows (e.g. ring on a single device) appends
+nothing — an empty entry must never become the gating baseline.
 """
 from __future__ import annotations
 
@@ -29,7 +35,7 @@ import time
 
 from benchmarks import (bench_attention, bench_kv_cache, bench_flops,
                         bench_topk, bench_pretrain, bench_niah,
-                        bench_serving)
+                        bench_serving, bench_ring)
 
 SUITES = {
     "attention": bench_attention,
@@ -39,9 +45,10 @@ SUITES = {
     "pretrain": bench_pretrain,
     "niah": bench_niah,
     "serving": bench_serving,
+    "ring": bench_ring,
 }
 
-SNAPSHOT_SUITES = ("attention", "serving")
+SNAPSHOT_SUITES = ("attention", "serving", "ring")
 
 
 def _git_sha() -> str:
@@ -104,7 +111,7 @@ def main() -> None:
             rows = mod.run(quick=not args.full)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
-            if name in SNAPSHOT_SUITES and not args.no_snapshot:
+            if name in SNAPSHOT_SUITES and rows and not args.no_snapshot:
                 path = write_snapshot(name, rows, full=args.full)
                 print(f"# snapshot appended to {path.name}",
                       file=sys.stderr, flush=True)

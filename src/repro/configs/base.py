@@ -66,6 +66,14 @@ class AttentionConfig:
     # the compact seam engages; the unfused composition is kept as the
     # parity oracle (tests/test_fused_forward.py).
     fwd_fuse: bool = True
+    # Ring-SFA context parallelism (distributed/ring.py): shard the train
+    # sequence over the mesh's "seq" axis and rotate (n/P, k) K-code
+    # payloads + V blocks around the device ring instead of dense K — per-
+    # hop K-bytes shrink by ~d/(2k). Engages on causal SFA train layers
+    # (no window / rope-protect / MLA) when the active mesh has a seq axis
+    # of size > 1 dividing the sequence; everywhere else the flag is
+    # inert (single-device kernel composition, structured RingReport).
+    ring: bool = False
     # SFA-on-RoPE handling (paper A.1): keep a few leading dims dense so
     # position info survives sparsification; 0 = sparsify everything.
     sfa_rope_protect: int = 0

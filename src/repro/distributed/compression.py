@@ -46,8 +46,11 @@ def compress_tree(grads, err_state, fraction: float = 0.05,
             return g, e
         return compress_leaf(g, e, fraction)
     pairs = jax.tree.map(one, grads, err_state)
-    comp = jax.tree.map(lambda p: p[0], pairs,
-                        is_leaf=lambda x: isinstance(x, tuple))
-    new_err = jax.tree.map(lambda p: p[1], pairs,
-                           is_leaf=lambda x: isinstance(x, tuple))
-    return comp, new_err
+    # split the per-leaf (comp, err) pairs on the STRUCTURAL boundary: an
+    # `is_leaf=isinstance(x, tuple)` extraction cannot tell a per-leaf pair
+    # from a tuple-valued container inside ``grads`` itself (it would stop
+    # one level early and hand back (comp, err) pairs where a subtree of
+    # comps belongs). ``tree.transpose`` is told the outer treedef
+    # explicitly, so tuple containers in the grad tree are unambiguous.
+    return jax.tree.transpose(jax.tree.structure(grads),
+                              jax.tree.structure((0, 0)), pairs)

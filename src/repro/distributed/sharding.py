@@ -20,7 +20,11 @@ _state = threading.local()
 # logical axis -> mesh axis (or tuple of axes) defaults for the 2D/3D meshes
 DEFAULT_RULES = {
     "batch": ("pod", "data"),     # DP over pod×data
-    "seq": None,                  # replicated (SP variants override)
+    # context/ring parallelism: activations' token axis shards over the
+    # mesh's "seq" axis when the mesh carries one (make_debug_mesh(seq=P),
+    # --ring P). Ring-SFA (distributed/ring.py) runs its hop loop over the
+    # same axis; on meshes without it the rule cleans to None (replicated).
+    "seq": "seq",
     # Megatron-SP-style residual sharding (§Perf i9): layer-boundary
     # activations shard d_model over the model axis, so per-layer remat
     # checkpoints cost 1/TP of the replicated footprint (deepseek-v2 train:
@@ -79,6 +83,14 @@ def axis_size(mesh_axis: str) -> int:
         return 1
     mesh, _ = ctx
     return mesh.shape.get(mesh_axis, 1)
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh of the active rules context (None outside one). The
+    shard_map kernel routing (distributed/shard.py, distributed/ring.py)
+    resolves its mesh here so model code stays mesh-agnostic."""
+    ctx = _current()
+    return None if ctx is None else ctx[0]
 
 
 def logical_to_spec(logical: Sequence[Optional[str]]) -> P:

@@ -44,11 +44,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as att
+from repro.distributed.shard import (
+    run_tp, tp_flash_sfa, tp_flash_sfa_bwd, tp_proj_rtopk,
+)
 from repro.kernels.code_grad import scatter_code_grads
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_sfa import flash_sfa
-from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, pair_closure_indices
-from repro.kernels.rtopk import proj_rtopk, rtopk
+from repro.kernels.flash_sfa_bwd import pair_closure_indices
+from repro.kernels.rtopk import rtopk
 
 
 def fold_heads(x):
@@ -86,8 +88,8 @@ def fused_qk_codes(x, w, positions, *, h, hkv, hd, sfa_k, rope_spec=None):
     w = w.astype(x.dtype)               # unfused path projects in x.dtype
     wq = jnp.moveaxis(w[:, :h * hd].reshape(m, h, hd), 1, 0)
     wk = jnp.moveaxis(w[:, h * hd:(h + hkv) * hd].reshape(m, hkv, hd), 1, 0)
-    qv, qi = proj_rtopk(x, wq, positions, k=sfa_k, rope_spec=rope_spec)
-    kv_, ki = proj_rtopk(x, wk, positions, k=sfa_k, rope_spec=rope_spec)
+    qv, qi = tp_proj_rtopk(x, wq, positions, k=sfa_k, rope_spec=rope_spec)
+    kv_, ki = tp_proj_rtopk(x, wk, positions, k=sfa_k, rope_spec=rope_spec)
     if hkv != h:
         kv_ = jnp.repeat(kv_, h // hkv, axis=1)
         ki = jnp.repeat(ki, h // hkv, axis=1)
@@ -99,13 +101,14 @@ def _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale, return_residuals=False):
     """Shared primal body: fold -> rtopk -> flash_sfa (-> residuals)."""
     b, n, h, d = q.shape
     qf, kf, vf = fold_heads(q), fold_heads(k), fold_heads(v)
-    qv, qi = rtopk(qf, sfa_k)
-    kv_, ki = rtopk(kf, sfa_k)
+    qv, qi = run_tp(lambda xx: rtopk(xx, sfa_k), (qf,), (0,), (0, 0))
+    kv_, ki = run_tp(lambda xx: rtopk(xx, sfa_k), (kf,), (0,), (0, 0))
     if not return_residuals:
-        out = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale)
+        out = tp_flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal,
+                           scale=scale)
         return unfold_heads(out, b, h)
-    out, lse = flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal, scale=scale,
-                         return_residuals=True)
+    out, lse = tp_flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal,
+                            scale=scale, return_residuals=True)
     # The kernel backward needs only the codes + folded v + (out, lse); the
     # dense q/k/v are NOT saved (shapes/dtypes are recoverable from g and
     # the codes), keeping residual memory at the FA2 contract.
@@ -152,16 +155,16 @@ def _sfa_bwd(sfa_k, causal, scale, bwd, emit, res, g):
         # outside the op and its vjp runs through XLA autodiff). The train
         # path that never pays this scatter is the fused projection seam in
         # repro/models/attention.py.
-        dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
-                                      d=d, causal=causal, scale=scale,
-                                      emit=emit)
+        dqc, dkc, dvf = tp_flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
+                                         d=d, causal=causal, scale=scale,
+                                         emit=emit)
         qi_s = pair_closure_indices(qi, d) if emit == "compact2" else qi
         ki_s = pair_closure_indices(ki, d) if emit == "compact2" else ki
         dqf = scatter_code_grads(dqc, qi_s, d)
         dkf = scatter_code_grads(dkc, ki_s, d)
     else:
-        dqf, dkf, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
-                                      d=d, causal=causal, scale=scale)
+        dqf, dkf, dvf = tp_flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf,
+                                         d=d, causal=causal, scale=scale)
     return (unfold_heads(dqf, b, h).astype(qp.dtype),
             unfold_heads(dkf, b, h).astype(kp.dtype),
             unfold_heads(dvf, b, h).astype(vp.dtype))

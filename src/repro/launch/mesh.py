@@ -14,8 +14,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_debug_mesh(model: int = 1, data: int | None = None):
-    """Small mesh over whatever devices exist (tests)."""
+def make_debug_mesh(model: int = 1, data: int | None = None, seq: int = 1):
+    """Small mesh over whatever devices exist (tests).
+
+    ``seq > 1`` inserts a "seq" axis between data and model for ring-SFA
+    context parallelism (distributed/ring.py); the 2D shape is kept when
+    ``seq == 1`` so existing (data, model) specs are unchanged."""
     n = len(jax.devices())
-    data = data or (n // model)
+    data = data or (n // (model * seq))
+    if seq > 1:
+        return jax.make_mesh((data, seq, model), ("data", "seq", "model"))
     return jax.make_mesh((data, model), ("data", "model"))

@@ -35,6 +35,15 @@ def main():
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--mesh", default="debug",
                     choices=["debug", "single-pod", "multi-pod"])
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree of the debug mesh's model "
+                         "axis (shard_map'd kernels + TP-eligible compact "
+                         "seam, distributed/shard.py; DESIGN.md \u00a79)")
+    ap.add_argument("--ring", type=int, default=1,
+                    help="ring degree of the debug mesh's seq axis: > 1 "
+                         "enables Ring-SFA context parallelism on eligible "
+                         "SFA layers (code-payload hops, distributed/"
+                         "ring.py; DESIGN.md \u00a79)")
     ap.add_argument("--attn-backend", default=None,
                     choices=["xla", "pallas", "auto"],
                     help="override cfg.attention.backend for the step")
@@ -58,7 +67,11 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = (make_debug_mesh() if args.mesh == "debug" else
+    if args.mesh != "debug" and (args.tp > 1 or args.ring > 1):
+        raise SystemExit("--tp/--ring shape the debug mesh only; production "
+                         "meshes fix their own axes (launch/mesh.py)")
+    mesh = (make_debug_mesh(model=args.tp, seq=args.ring)
+            if args.mesh == "debug" else
             make_production_mesh(multi_pod=args.mesh == "multi-pod"))
 
     with mesh, axis_rules(mesh):
@@ -74,10 +87,17 @@ def main():
         step = jax.jit(
             make_train_step(cfg, ocfg, attn_backend=args.attn_backend,
                             bwd_emit=args.bwd_emit,
-                            fwd_fuse=args.fwd_fuse),
+                            fwd_fuse=args.fwd_fuse,
+                            ring=True if args.ring > 1 else None),
             in_shardings=(sh(pspec),
                           sh(type(opt)(step=P(), m=pspec, v=pspec)),
                           None),
+            # pin outputs to the input layouts: the shard_map'd kernel
+            # paths can tip GSPMD's inference toward resharding a param's
+            # round-trip, which donation then rejects
+            out_shardings=(sh(pspec),
+                           sh(type(opt)(step=P(), m=pspec, v=pspec)),
+                           None),
             donate_argnums=(0, 1))
         for s in range(args.steps):
             batch = {k: jnp.asarray(v) for k, v in

@@ -49,11 +49,12 @@ from repro.core.kv_cache import (
     SparseKV, idx_dtype, pack_indices,
 )
 from repro.core.sparse import topk_st, sparsify, SparseCode
-from repro.distributed.sharding import axis_size, constrain
-from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, pair_closure_indices
+from repro.distributed.ring import ring_degree, ring_sfa_op
+from repro.distributed.shard import replicate, tp_flash_sfa, tp_flash_sfa_bwd
+from repro.distributed.sharding import axis_size, constrain, current_mesh
+from repro.kernels.flash_sfa_bwd import pair_closure_indices
 from repro.kernels.flash_sfa_decode import LANES as _FM_TILE, \
     feature_major_prefill
-from repro.kernels.flash_sfa import flash_sfa
 from repro.kernels.ops import (
     _sfa_pallas_fwd, fold_heads, fused_qk_codes, unfold_heads,
 )
@@ -172,12 +173,15 @@ def compact_seam_ineligible_reason(cfg: ModelConfig,
     else between projection and kernel must be identity: qk-norm rescales
     the cotangent by data-dependent per-row statistics (off any fixed
     support), and windows / rope-protect / MLA / distill need the dense
-    q/k/v outside the seam. The seam also skips the ``_constrain_qkv``
-    sharding annotations, so it only engages on an unsharded model axis —
-    under tensor parallelism the layer falls back to the constrained path
-    below (op-level compact emit). Ineligible ``bwd_emit="compact"`` layers
-    still get the compact kernel emit at the op level (ops.py scatters once
-    for the generic vjp)."""
+    q/k/v outside the seam. Tensor parallelism IS admitted (DESIGN.md §9):
+    the seam's kernels route through shard_map over the model axis
+    (``distributed/shard.py``) with whole-head slices per device, so the
+    dQ/dK code gradients need no cross-device reduction — eligibility is
+    just that both head counts divide the TP degree (per-device slices must
+    be whole head blocks; otherwise the layer falls back to the
+    ``_constrain_qkv``-annotated path below, op-level compact emit).
+    Ineligible ``bwd_emit="compact"`` layers still get the compact kernel
+    emit at the op level (ops.py scatters once for the generic vjp)."""
     a = cfg.attention
     if a is None or a.sfa_k is None:
         return "not an SFA layer (sfa_k unset)"
@@ -194,8 +198,14 @@ def compact_seam_ineligible_reason(cfg: ModelConfig,
         return "sfa_rope_protect keeps leading dims dense outside the codes"
     if cfg.sfa_distill > 0:
         return "distill needs the dense q/k/v for the stop-grad teacher"
-    if axis_size("model") != 1:
-        return "tensor-parallel model axis needs _constrain_qkv annotations"
+    if a.ring and ring_degree() > 1:
+        return ("ring context parallelism routes through the op-level ring "
+                "path (distributed/ring.py), not the projection seam")
+    tp = axis_size("model")
+    if tp > 1 and (a.num_heads % tp or a.num_kv_heads % tp):
+        return (f"heads {a.num_heads}/{a.num_kv_heads} do not divide the TP "
+                f"degree {tp}: the shard_map'd seam needs whole per-device "
+                f"head slices to keep dQ/dK code grads reduction-free")
     return None
 
 
@@ -240,6 +250,63 @@ def _record_seam(where: str, taken: bool, reason: Optional[str],
                                                fused_fwd=fused_fwd)
 
 
+def ring_ineligible_reason(cfg: ModelConfig, window=None,
+                           n: Optional[int] = None) -> Optional[str]:
+    """None when a train-mode layer with ``ring=True`` can take the
+    Ring-SFA path (distributed/ring.py); else a human reason.
+
+    The ring shards the *sequence*, so anything row-wise (projection,
+    qk-norm, RoPE) is free — the constraints are the hop schedule's:
+    causal SFA with fully-sparse codes, and a sequence divisible by the
+    ring degree. The windowed / rope-protect / MLA fallbacks need dense
+    K beyond a single shard's reach."""
+    a = cfg.attention
+    if a is None or a.sfa_k is None:
+        return "not an SFA layer (sfa_k unset)"
+    if not a.causal:
+        return "ring hop schedule is the causal triangle"
+    if a.mla is not None:
+        return "MLA latent attention has no ring path"
+    if window is not None or a.window is not None:
+        return "windowed layers mask outside the ring hop schedule"
+    if a.sfa_rope_protect > 0:
+        return "rope-protected dims make the hop payload dense"
+    p = ring_degree()
+    if p <= 1:
+        return "no seq mesh axis of size > 1 in the active context"
+    if n is not None and n % p:
+        return f"sequence {n} does not divide the ring degree {p}"
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RingReport:
+    """Structured record of a Ring-SFA routing decision (trace-time) —
+    the ring analogue of ``CompactSeamReport``."""
+    where: str
+    taken: bool
+    reason: Optional[str] = None     # set when the ring was NOT taken
+
+
+_RING_REPORTS: dict = {}
+
+
+def ring_reports() -> tuple:
+    """All deduped ring routing decisions since the last clear."""
+    return tuple(_RING_REPORTS.values())
+
+
+def clear_ring_reports() -> None:
+    _RING_REPORTS.clear()
+
+
+def _record_ring(where: str, taken: bool, reason: Optional[str]) -> None:
+    key = (where, taken, reason)
+    if key not in _RING_REPORTS:
+        _RING_REPORTS[key] = RingReport(where=where, taken=taken,
+                                        reason=reason)
+
+
 def _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k, causal,
                               scale, rope_spec, fwd_fuse=False):
     """Primal: qkv projection [-> rope] -> GQA expand -> ops.py's pallas
@@ -259,9 +326,9 @@ def _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k, causal,
                                          rope_spec=rope_spec)
         wv = w[:, (h + hkv) * hd:].astype(dt)
         vf = fold_heads(_expand_kv((x @ wv).reshape(b, n, hkv, hd), h))
-        out, lse = flash_sfa(qv, qi, kv_, ki, vf, d=hd, causal=causal,
-                             scale=scale, return_residuals=True,
-                             block_skip=True)
+        out, lse = tp_flash_sfa(qv, qi, kv_, ki, vf, d=hd, causal=causal,
+                                scale=scale, return_residuals=True,
+                                block_skip=True)
         return (unfold_heads(out, b, h),
                 (x, w, positions, qv, qi, kv_, ki, vf, out, lse))
     qkv = x @ w.astype(dt)
@@ -321,9 +388,9 @@ def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, rope_spec,
     pair_widen = rope_spec is not None or req_emit == "compact2"
     emit = "compact2" if pair_widen else "compact"
     rot = hd if rope_spec is None else rope_spec[1]
-    dqc, dkc, dvf = flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf, d=hd,
-                                  causal=causal, scale=scale, emit=emit,
-                                  rot_dim=rot)
+    dqc, dkc, dvf = tp_flash_sfa_bwd(qv, qi, kv_, ki, vf, out, lse, gf, d=hd,
+                                     causal=causal, scale=scale, emit=emit,
+                                     rot_dim=rot)
     if not pair_widen:
         qi_c, ki_c = qi, ki
     else:
@@ -366,9 +433,13 @@ def _sfa_proj_attend_bwd(h, hkv, hd, sfa_k, causal, scale, rope_spec,
     dv32 = dv_flat.astype(jnp.float32)
     dx_v = dv32 @ wv.astype(jnp.float32).T
     dwv = x_flat.astype(jnp.float32).T @ dv32
+    # The dW blocks are weight-sized: pin the TP-sharded q/k pieces back to
+    # replicated before joining them with the (replicated) v piece — see
+    # distributed/shard.py::replicate for why the mixed-sharding concat is
+    # unsafe under a multi-axis mesh.
     dw = jnp.concatenate(
-        [jnp.moveaxis(dwq, 0, 1).reshape(m, h * hd),
-         jnp.moveaxis(dwk, 0, 1).reshape(m, hkv * hd), dwv],
+        [replicate(jnp.moveaxis(dwq, 0, 1).reshape(m, h * hd)),
+         replicate(jnp.moveaxis(dwk, 0, 1).reshape(m, hkv * hd)), dwv],
         axis=1).astype(w.dtype)
     dx = (dx_q + dx_k + dx_v).reshape(b, n, m).astype(x.dtype)
     # positions are integer coordinates: their cotangent is the float0 zero
@@ -651,17 +722,34 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
     # backend="pallas" routes through the fused rtopk->FlashSFA kernels (fwd
     # AND bwd — kernels/flash_sfa_bwd.py); windowed / rope-protected layers
     # fall back to the XLA path via the registry (structured report).
-    sel = select_backend(a.backend, _request(a, mode="full", window=window),
-                         where=f"{cfg.name}/attention")
-    qp, pad_h = _pad_heads(q, h)
-    h_eff = h + pad_h
-    qp, kp, vp = _constrain_qkv(qp, k, v, h_eff)
-    # k/v stay at hkv heads: the backend sparsifies first, then expands
-    o = sel.backend.full(qp, kp, vp, num_heads=h_eff, sfa_k=a.sfa_k,
-                         rope_protect=a.sfa_rope_protect, causal=a.causal,
-                         window=window, scale=scale, bwd_emit=a.bwd_emit)
-    if pad_h:
-        o = o[:, :, :h]
+    o = None
+    if mode == "train" and a.sfa_k is not None and a.ring:
+        # Ring-SFA context parallelism (distributed/ring.py): the rope'd
+        # dense q/k fold and shard over the seq mesh axis; rtopk and the
+        # hop loop run per shard inside the ring's shard_map, rotating
+        # (n/P, k) K-code payloads instead of dense K. GQA expands BEFORE
+        # rtopk so group members carry identical codes, matching the
+        # single-device composition row-for-row.
+        reason = ring_ineligible_reason(cfg, window, n=n)
+        _record_ring(f"{cfg.name}/attention", reason is None, reason)
+        if reason is None:
+            o = unfold_heads(
+                ring_sfa_op(fold_heads(q), fold_heads(_expand_kv(k, h)),
+                            fold_heads(_expand_kv(v, h)), sfa_k=a.sfa_k,
+                            scale=scale), b, h)
+    if o is None:
+        sel = select_backend(a.backend,
+                             _request(a, mode="full", window=window),
+                             where=f"{cfg.name}/attention")
+        qp, pad_h = _pad_heads(q, h)
+        h_eff = h + pad_h
+        qp, kp, vp = _constrain_qkv(qp, k, v, h_eff)
+        # k/v stay at hkv heads: the backend sparsifies first, then expands
+        o = sel.backend.full(qp, kp, vp, num_heads=h_eff, sfa_k=a.sfa_k,
+                             rope_protect=a.sfa_rope_protect, causal=a.causal,
+                             window=window, scale=scale, bwd_emit=a.bwd_emit)
+        if pad_h:
+            o = o[:, :, :h]
     distill = jnp.zeros((), jnp.float32)
     if mode == "train" and a.sfa_k is not None and cfg.sfa_distill > 0:
         # paper Eq. 8: pull SFA head outputs toward stop-grad dense outputs

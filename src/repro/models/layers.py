@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.shard import run_tp
 from repro.kernels.code_grad import code_grad_dw, code_grad_dx
 
 
@@ -46,10 +47,21 @@ def sparse_proj_bwd(x, w_heads, g_vals, g_idx, *, d: int,
 
     x: (n, m) projection input; w_heads: (H, m, d) per-head weight blocks;
     g_vals/g_idx: (H, n, k). Returns (dx (n, m), dw (H, m, d)), both f32.
+
+    Under tensor parallelism the head axis splits over the model mesh axis
+    (``distributed/shard.py``): dW stays local to each head shard
+    (column-parallel), and dx — the ONE cross-device reduction of the
+    compact seam backward — psums its per-shard partials inside the
+    shard_map region, the classic column-parallel dL/dx all-reduce.
     """
-    dx = code_grad_dx(g_vals, g_idx, w_heads, d=d, interpret=interpret)
-    dw = code_grad_dw(x, g_vals, g_idx, d=d, interpret=interpret)
-    return dx, dw
+    def fn(xx, ww, gv, gi):
+        dx = code_grad_dx(gv, gi, ww, d=d, interpret=interpret)
+        dw = code_grad_dw(xx, gv, gi, d=d, interpret=interpret)
+        return dx, dw
+
+    return run_tp(fn, (x, w_heads, g_vals, g_idx),
+                  in_axes=(None, 0, 0, 0), out_axes=(None, 0),
+                  reduce_out=(0,))
 
 
 def norm_init(dim: int, kind: str = "rmsnorm"):

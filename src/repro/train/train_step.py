@@ -35,7 +35,8 @@ from repro.optim import OptimizerConfig, make_optimizer
 
 def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str],
                            bwd_emit: Optional[str] = None,
-                           fwd_fuse: Optional[bool] = None):
+                           fwd_fuse: Optional[bool] = None,
+                           ring: Optional[bool] = None):
     if cfg.attention is None:
         return cfg
     updates = {}
@@ -45,6 +46,8 @@ def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str],
         updates["bwd_emit"] = bwd_emit
     if fwd_fuse is not None:
         updates["fwd_fuse"] = fwd_fuse
+    if ring is not None:
+        updates["ring"] = ring
     if not updates:
         return cfg
     return dataclasses.replace(
@@ -56,8 +59,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                     grad_compression: Optional[float] = None,
                     attn_backend: Optional[str] = None,
                     bwd_emit: Optional[str] = None,
-                    fwd_fuse: Optional[bool] = None):
-    cfg = _override_attn_backend(cfg, attn_backend, bwd_emit, fwd_fuse)
+                    fwd_fuse: Optional[bool] = None,
+                    ring: Optional[bool] = None):
+    cfg = _override_attn_backend(cfg, attn_backend, bwd_emit, fwd_fuse, ring)
     update = make_optimizer(opt_cfg)
 
     def compute_grads(params, batch):

@@ -1,7 +1,10 @@
 """Distribution-layer tests: sharding specs, roofline parser, small-mesh pjit.
 
 These run on the single CPU device (divisibility fallbacks make every spec
-legal on a 1x1 mesh); the 512-device production meshes are exercised by
+legal on a 1x1 mesh) AND on the CI multi-device fast lane
+(XLA_FLAGS=--xla_force_host_platform_device_count=8), where the debug mesh
+really shards — shapes here are chosen divisible by 8 so the same tests are
+non-vacuous there; the 512-device production meshes are exercised by
 repro.launch.dryrun (results/dryrun_*.json).
 """
 import jax
@@ -81,10 +84,13 @@ def test_axis_rules_noop_outside_context(rng):
 
 
 def test_constrain_inside_mesh(rng):
+    # shape (8, 8) keeps the batch dim divisible on the 8-device CI lane
+    # (XLA_FLAGS=--xla_force_host_platform_device_count=8) as well as on
+    # the single real CPU device
     mesh = make_debug_mesh(model=1)
     with mesh, axis_rules(mesh):
-        assert axis_size("data") == 1
-        x = jax.random.normal(rng, (4, 8))
+        assert axis_size("data") == jax.device_count()
+        x = jax.random.normal(rng, (8, 8))
         y = jax.jit(lambda x: constrain(x, ("batch", None)))(x)
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
@@ -177,7 +183,9 @@ def test_analytic_flops_track_model_flops():
 
 @pytest.mark.slow
 def test_small_mesh_pjit_train_step(rng):
-    """End-to-end pjit on the (1,1) debug mesh: specs are consistent."""
+    """End-to-end pjit on the debug mesh: specs are consistent. Batch 8
+    stays divisible by the data axis on both the single-device run and the
+    8-device CI lane."""
     from repro.optim import OptimizerConfig, init_opt_state
     from repro.train.train_step import make_train_step
     from jax.sharding import NamedSharding
@@ -192,8 +200,8 @@ def test_small_mesh_pjit_train_step(rng):
         sh = lambda t: jax.tree.map(
             lambda s: NamedSharding(mesh, s), t,
             is_leaf=lambda x: isinstance(x, P))
-        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
-                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+                 "labels": jnp.zeros((8, 32), jnp.int32)}
         step = jax.jit(make_train_step(cfg, OptimizerConfig()),
                        in_shardings=(sh(pspec),
                                      sh(type(opt)(step=P(), m=pspec, v=pspec)),

@@ -306,3 +306,77 @@ def test_rope_protect_still_falls_back():
     cfg2 = dataclasses.replace(
         cfg, attention=dataclasses.replace(cfg.attention, sfa_rope_protect=0))
     assert attn.compact_train_eligible(cfg2)
+
+
+# --------------------------------------------------------------------------
+# TP dimension of the eligibility matrix (ISSUE 9): the seam is TP-eligible
+# when both head counts divide the model-axis degree (whole per-device head
+# slices keep dQ/dK code grads reduction-free, distributed/shard.py)
+# --------------------------------------------------------------------------
+
+def test_seam_tp_eligibility_matrix(monkeypatch):
+    """Unit-level TP sweep without a mesh: ``axis_size("model")`` is the
+    only TP input to the eligibility rule, so patching it enumerates the
+    matrix on any device count. Divisible head counts stay eligible;
+    non-divisible fall back with a structured reason naming the degree; a
+    ring-active layer steps aside to the op-level ring path."""
+    for tp, h, hkv, eligible in ((1, 4, 2, True), (2, 4, 2, True),
+                                 (4, 4, 2, False),   # hkv=2 % 4
+                                 (2, 3, 3, False),   # h=3 % 2
+                                 (8, 8, 8, True)):
+        monkeypatch.setattr(
+            attn, "axis_size",
+            lambda name, _tp=tp: _tp if name == "model" else 1)
+        cfg = _rope_cfg(h, hkv, bwd_emit="compact2")
+        reason = attn.compact_seam_ineligible_reason(cfg)
+        if eligible:
+            assert reason is None, (tp, h, hkv, reason)
+        else:
+            assert reason and "divide" in reason and str(tp) in reason, \
+                (tp, h, hkv, reason)
+    # ring context parallelism routes around the seam entirely
+    monkeypatch.setattr(attn, "axis_size", lambda name: 1)
+    monkeypatch.setattr(attn, "ring_degree", lambda *a, **k: 8)
+    cfg_ring = _rope_cfg(4, 2, ring=True)
+    reason = attn.compact_seam_ineligible_reason(cfg_ring)
+    assert reason and "ring" in reason
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 emulated devices: XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8")
+def test_seam_taken_under_tp2_grad_parity(rng):
+    """Acceptance (ISSUE 9): on a real model=2 mesh the ``compact2`` seam
+    is TAKEN (not fallen back) for divisible GQA heads and its weight/input
+    grads match the single-device run <= 1e-4 — including the dw
+    replication pin in ``_sfa_proj_attend_bwd`` (distributed/shard.py::
+    replicate) that keeps the concat of shard_map'd dwq/dwk with the
+    replicated dwv exact on a (data, model) mesh."""
+    from repro.distributed.sharding import axis_rules
+    from repro.launch.mesh import make_debug_mesh
+
+    cfg = _rope_cfg(4, 2, bwd_emit="compact2")
+    params, (gp_ref, gx_ref) = _attn_grads(rng, cfg)
+    mesh = make_debug_mesh(model=2)
+    attn.clear_compact_seam_reports()
+    with mesh, axis_rules(mesh):
+        x = jax.random.normal(jax.random.fold_in(rng, 9),
+                              (2, 96, cfg.d_model))
+
+        def loss(p, x):
+            o = attn.attention_apply(p, x, cfg=cfg, mode="train").out
+            w = jnp.arange(o.size, dtype=o.dtype).reshape(o.shape) / o.size
+            return jnp.sum(o * w + 0.5 * o * o)
+
+        g_tp = jax.jit(jax.grad(loss, argnums=(0, 1)))(params, x)
+    assert any(r.taken for r in attn.compact_seam_reports()), \
+        attn.compact_seam_reports()
+    np.testing.assert_allclose(np.asarray(gx_ref), np.asarray(g_tp[1]),
+                               atol=ATOL)
+    for key in ("w_qkv", "w_o"):
+        np.testing.assert_allclose(np.asarray(gp_ref[key]["w"]),
+                                   np.asarray(g_tp[0][key]["w"]), atol=ATOL)
+    # non-divisible heads fall back with the structured TP reason
+    with mesh, axis_rules(mesh):
+        reason = attn.compact_seam_ineligible_reason(_rope_cfg(3, 3))
+    assert reason and "divide" in reason
