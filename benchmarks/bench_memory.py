@@ -1,0 +1,187 @@
+"""Activation-memory trajectory: compiled peak bytes per remat policy.
+
+    PYTHONPATH=src python -m benchmarks.bench_memory [--smoke]
+
+Measures what the remat-policy subsystem (core/remat.py, DESIGN.md §10)
+actually buys, straight from XLA's buffer assignment:
+
+  * **peak bytes** — ``jax.jit(grad(train_loss)).lower(...).compile()
+    .memory_analysis().temp_size_in_bytes`` per policy at fixed (batch, n):
+    the whole-step peak of live temporaries, the number that OOMs a device.
+  * **max trainable n** — the largest n on a doubling ladder whose compiled
+    peak fits a fixed byte budget (``BUDGET_MB``), per policy: the
+    context-length headline the policy buys at constant memory.
+
+Geometries keep the real attention head shape — (h, hkv, hd, k) of
+llama3.2-3b (24/8/128, k=16, RoPE'd GQA) and gemma3-4b (8/4/256, k=16,
+qk-norm; window cleared — the memory geometry probes the global-attention
+layers, and windowed layers route off the code-tagging pallas paths) — and
+shrink everything orthogonal to activation residuals (d_model, d_ff, vocab,
+depth), so the compile stays CI-sized while the q/k/code residual bytes
+keep their real proportions.
+
+What the numbers mean (and the honest physics, DESIGN.md §10): "codes"
+beats "none" by the dense-residual-vs-code margin the paper's d/k ratio
+predicts — that pair is the bench's hard gate (asserted strictly here,
+snapshot-gated in check_trajectory.py). "codes" can NOT beat "full" on
+whole-step peak: "full" saves *nothing* beyond the scan carry, so the
+"codes" saved set is a strict superset and the gap is exactly the stacked
+code bytes (measured here as ``codes_vs_full``, ~parity). What "codes"
+buys over "full" is backward *compute*: the projection->RoPE->top-k slice
+of every layer is never re-run (the saved codes DCE it out of the
+recompute), at a code-residual cost 2k/(h/hkv·d)·L of the dense baseline.
+
+Rows append to ``BENCH_memory.json`` (benchmarks/run.py) and gate in
+``check_trajectory.py``: ``mem_peak_MB_*`` lower-is-better, ``mem_maxn_*``
+higher-is-better.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init as model_init, loss_fn
+
+# fixed byte budget for the max-trainable-n ladder. Chosen so the smoke
+# geometry's policies split across rungs (none tops out below codes) while
+# the largest probed rung stays a CI-sized compile.
+BUDGET_MB = 256
+N_LADDER = (512, 1024, 2048, 4096)
+POLICIES = ("none", "full", "codes")
+
+# (arch to borrow the attention head geometry from, overrides)
+GEOMETRIES = {
+    "llama3": ("llama3.2-3b", {}),
+    # gemma3's interleaved window layers route off the pallas train path;
+    # the memory geometry measures its global layers (window=None) — the
+    # qk-norm stays, exercising the seam-ineligible unfused tagging path.
+    "gemma3": ("gemma3-4b", {"window": None, "local_global_pattern": None}),
+}
+
+
+def geom_cfg(geom: str, *, layers: int, n: int, remat: str):
+    arch, att_over = GEOMETRIES[geom]
+    cfg = get_config(arch)
+    a = dataclasses.replace(cfg.attention, backend="pallas",
+                            bwd_emit="compact", fwd_fuse=True, **att_over)
+    return dataclasses.replace(
+        cfg, name=f"{geom}-memgeom", num_layers=layers, d_model=256,
+        d_ff=512, vocab_size=512, max_seq_len=max(n, 128), remat=remat,
+        loss_chunk=128, attention=a)
+
+
+def peak_temp_bytes(cfg, n: int, batch: int = 1) -> int:
+    """Compiled peak live-temporary bytes of one train-grad step.
+
+    Shapes only — ``eval_shape``'d params, no init compute; XLA's buffer
+    assignment (``memory_analysis``) is a property of the compiled program.
+    """
+    params = jax.eval_shape(lambda: model_init(jax.random.PRNGKey(0), cfg))
+    batch_d = {"tokens": jax.ShapeDtypeStruct((batch, n), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((batch, n), jnp.int32)}
+
+    def train_loss(p, b):
+        loss, _ = loss_fn(p, b, cfg)
+        return loss
+
+    compiled = jax.jit(jax.grad(train_loss)).lower(params, batch_d).compile()
+    return compiled.memory_analysis().temp_size_in_bytes
+
+
+def _measure(cache: dict, geom: str, layers: int, n: int, remat: str) -> int:
+    key = (geom, layers, n, remat)
+    if key not in cache:
+        cfg = geom_cfg(geom, layers=layers, n=n, remat=remat)
+        cache[key] = peak_temp_bytes(cfg, n)
+    return cache[key]
+
+
+def max_trainable_n(cache: dict, geom: str, layers: int, remat: str,
+                    budget_bytes: int) -> int:
+    """Largest ladder rung whose compiled peak fits the budget (0 if none).
+
+    Walks the doubling ladder bottom-up and stops at the first miss —
+    peak bytes grow monotonically in n, so later rungs cannot fit either.
+    """
+    best = 0
+    for n in N_LADDER:
+        if _measure(cache, geom, layers, n, remat) > budget_bytes:
+            break
+        best = n
+    return best
+
+
+def run(quick: bool = True, smoke: bool = False):
+    """Returns rows of (name, us_per_call, derived) — us is compile time.
+
+    The smoke and quick sweeps are IDENTICAL on purpose: every committed
+    ``BENCH_memory.json`` key must stay covered by the CI smoke run
+    (check_trajectory.py fails uncovered keys), and unlike the attention
+    suite these rows have no n-invariant normalization to hide behind.
+    ``--full`` only deepens the stack (L=4) on top of the same keys.
+    """
+    del smoke
+    layers = 2
+    fixed_n = 1024
+    budget = BUDGET_MB * 1024 * 1024
+    cache: dict = {}
+    rows = []
+    for geom in GEOMETRIES:
+        t0 = time.perf_counter()
+        peaks = {p: _measure(cache, geom, layers, fixed_n, p)
+                 for p in POLICIES}
+        derived = ";".join(
+            [f"peak_MB_{p}={peaks[p] / 2**20:.1f}" for p in POLICIES] +
+            [f"codes_vs_none={peaks['none'] / peaks['codes']:.3f}",
+             f"codes_vs_full={peaks['full'] / peaks['codes']:.3f}"])
+        rows.append((f"mem_{geom}_n{fixed_n}_L{layers}",
+                     (time.perf_counter() - t0) * 1e6, derived))
+        # the acceptance measurement: saving codes must beat saving the
+        # dense linearization points at fixed (batch, n) on every geometry
+        assert peaks["codes"] < peaks["none"], (
+            f"{geom}: remat='codes' peak {peaks['codes']} is not below "
+            f"remat='none' {peaks['none']} — the code residuals stopped "
+            f"paying for themselves")
+
+        t0 = time.perf_counter()
+        maxn = {p: max_trainable_n(cache, geom, layers, p, budget)
+                for p in POLICIES}
+        derived = ";".join(
+            [f"maxn_{p}={maxn[p]}" for p in POLICIES] +
+            [f"budget_MB={BUDGET_MB}"])
+        rows.append((f"mem_{geom}_maxn_L{layers}",
+                     (time.perf_counter() - t0) * 1e6, derived))
+        assert maxn["codes"] > maxn["none"], (
+            f"{geom}: remat='codes' max trainable n {maxn['codes']} is not "
+            f"strictly above remat='none' {maxn['none']} at "
+            f"{BUDGET_MB} MiB — the policy buys no context headroom")
+    if not quick:
+        for geom in GEOMETRIES:
+            t0 = time.perf_counter()
+            peaks = {p: _measure(cache, geom, 4, 2048, p) for p in POLICIES}
+            derived = ";".join(
+                [f"peak_MB_{p}={peaks[p] / 2**20:.1f}" for p in POLICIES] +
+                [f"codes_vs_none={peaks['none'] / peaks['codes']:.3f}"])
+            rows.append((f"mem_{geom}_n2048_L4",
+                         (time.perf_counter() - t0) * 1e6, derived))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier-1 gate mode (same sweep; asserts fire "
+                         "either way — this flag just names the lane)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=True, smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ from repro.configs import get_config, paper_models
 from repro.data import DataConfig, markov_batch
 from repro.models import init as model_init
 from repro.optim import OptimizerConfig, init_opt_state
+from repro.configs.base import TrainPolicy
 from repro.train.train_step import make_train_step, make_eval_step
 
 
@@ -25,8 +26,9 @@ def _train(cfg, steps, dcfg, seed=0, attn_backend=None):
                            total_steps=steps)
     params = model_init(jax.random.PRNGKey(seed), cfg)
     opt = init_opt_state(params)
-    step = jax.jit(make_train_step(cfg, ocfg, attn_backend=attn_backend))
-    evalf = jax.jit(make_eval_step(cfg, attn_backend=attn_backend))
+    pol = TrainPolicy.from_model(cfg, backend=attn_backend)
+    step = jax.jit(make_train_step(cfg, ocfg, policy=pol))
+    evalf = jax.jit(make_eval_step(cfg, policy=pol))
     t0 = time.perf_counter()
     for s in range(steps):
         b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, s).items()}
@@ -73,7 +75,9 @@ def run(quick: bool = True):
     params = model_init(jax.random.PRNGKey(0), sfa_cfg)
     b = {k: jnp.asarray(v) for k, v in markov_batch(dcfg, 0).items()}
     for backend in ("xla", "pallas"):
-        stepf = jax.jit(make_train_step(sfa_cfg, ocfg, attn_backend=backend))
+        stepf = jax.jit(make_train_step(
+            sfa_cfg, ocfg, policy=TrainPolicy.from_model(sfa_cfg,
+                                                         backend=backend)))
         opt = init_opt_state(params)
         out = stepf(params, opt, b)          # compile
         jax.block_until_ready(out)

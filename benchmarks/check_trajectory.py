@@ -56,6 +56,15 @@ ticks, and cache utilization — deterministic scheduling metrics (greedy,
 on the same seeded trace in smoke and quick mode, so no n-normalization is
 needed. Wall-clock tokens/s is reported in the rows but never gated.
 
+Memory rows (``BENCH_memory.json``, ``mem_<geom>_<probe>_L<L>``) gate the
+remat-policy subsystem's deliverable (core/remat.py, DESIGN.md §10):
+compiled peak live-temporary bytes per policy (lower is better), the max
+trainable n under the fixed byte budget (higher is better), and the
+codes-vs-none peak ratio (higher is better — the headline the "codes"
+policy exists for). ``bench_memory.run()`` additionally asserts the strict
+codes<none / maxn(codes)>maxn(none) ordering itself, so an eroded policy
+fails the smoke step even before the trajectory comparison.
+
 An *intentional* byte-model change (e.g. a cheaper emit) that moves a ratio
 down must regenerate the snapshot in the same PR
 (``PYTHONPATH=src python -m benchmarks.run --only attention``), which is
@@ -79,6 +88,15 @@ ROW_RE = re.compile(
 # smoke and quick mode — so unlike the attention rows there is no
 # n-normalization, the numbers must simply reproduce.
 SERVE_ROW_RE = re.compile(r"^serve_(?P<mix>[a-z]+)_(?P<engine>[a-z0-9_]+)$")
+
+# memory rows (BENCH_memory.json, bench_memory.py): compiled peak temp
+# bytes per remat policy at a fixed geometry/shape, plus the max trainable
+# n under a fixed byte budget. Like the serving rows these carry no
+# n-normalization — smoke and quick run the IDENTICAL sweep, so the
+# numbers must simply reproduce (XLA buffer assignment is deterministic
+# for a fixed program; the tolerance absorbs compiler-version drift).
+MEM_ROW_RE = re.compile(
+    r"^mem_(?P<geom>[a-z0-9]+)_(?P<probe>n\d+|maxn)_L(?P<L>\d+)$")
 
 # gated field prefixes: (prefix, direction, normalize_by_n). Only
 # n-invariant quantities belong here — tpu_model_speedup* is excluded
@@ -111,6 +129,16 @@ SERVE_GATES = (
     ("spec_", "higher", False),
 )
 
+# memory gates: peak live bytes lower-is-better per policy; max trainable
+# n at the fixed budget higher-is-better. The codes-vs-none ratios ride
+# along under "higher" (the remat="codes" headline must not erode).
+# compile wall-clock (us_per_call) and budget_MB are never gated.
+MEM_GATES = (
+    ("peak_MB", "lower", False),
+    ("maxn", "higher", False),
+    ("codes_vs_none", "higher", False),
+)
+
 
 def parse_derived(derived: str) -> dict:
     """'a=1.5;b=xyz' -> {'a': 1.5, 'b': 'xyz'} (floats where they parse)."""
@@ -136,13 +164,16 @@ def gated_fields(name: str, derived: str):
         n = int(m.group("n"))
         key = (m.group("kind"), int(m.group("d")), int(m.group("k")))
         gates = GATES
-    else:
-        m = SERVE_ROW_RE.match(name)
-        if m is None:
-            return None, {}
+    elif (m := SERVE_ROW_RE.match(name)) is not None:
         n = 1
         key = ("serve", m.group("mix"), m.group("engine"))
         gates = SERVE_GATES
+    elif (m := MEM_ROW_RE.match(name)) is not None:
+        n = 1
+        key = ("mem", m.group("geom"), m.group("probe"), int(m.group("L")))
+        gates = MEM_GATES
+    else:
+        return None, {}
     fields = {}
     for f, v in parse_derived(derived).items():
         if not isinstance(v, float):
@@ -275,6 +306,8 @@ def main() -> None:
                     default=root / "BENCH_serving.json")
     ap.add_argument("--ring-baseline", type=pathlib.Path,
                     default=root / "BENCH_ring.json")
+    ap.add_argument("--memory-baseline", type=pathlib.Path,
+                    default=root / "BENCH_memory.json")
     ap.add_argument("--entry", type=int, default=-1,
                     help="which snapshot to gate against (default: last)")
     ap.add_argument("--tol", type=float, default=0.02,
@@ -282,11 +315,13 @@ def main() -> None:
     args = ap.parse_args()
 
     try:
-        from benchmarks import bench_attention, bench_serving, bench_ring
+        from benchmarks import (bench_attention, bench_serving, bench_ring,
+                                bench_memory)
     except ImportError:
         import bench_attention
         import bench_serving
         import bench_ring
+        import bench_memory
 
     problems = []
     print("name,us_per_call,derived")
@@ -303,6 +338,12 @@ def main() -> None:
         print(f"note: {args.ring_baseline.name} absent — ring rows ungated "
               f"(seed with XLA_FLAGS=--xla_force_host_platform_device_"
               f"count=8 `python -m benchmarks.run --only ring`)")
+    if args.memory_baseline.exists():
+        suites.append(("memory", bench_memory, args.memory_baseline))
+    else:
+        print(f"note: {args.memory_baseline.name} absent — memory rows "
+              f"ungated (seed with `python -m benchmarks.run "
+              f"--only memory`)")
     for suite, mod, base_path in suites:
         baseline = load_baseline(base_path, args.entry)
         # echo the smoke rows: this step doubles as the CI bench smoke

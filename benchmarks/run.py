@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                         parallelism — realized collective-permute bytes vs
                         the analytic per-hop model (needs multi-device:
                         XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    bench_memory     -> beyond-paper: compiled peak activation bytes + max
+                        trainable n per remat policy (core/remat.py's
+                        save-codes-not-dense-activations deliverable)
 
 The attention, serving and ring suites additionally append a snapshot (rows
 with their analytic byte models / deterministic scheduling metrics, git SHA,
@@ -35,7 +38,7 @@ import time
 
 from benchmarks import (bench_attention, bench_kv_cache, bench_flops,
                         bench_topk, bench_pretrain, bench_niah,
-                        bench_serving, bench_ring)
+                        bench_serving, bench_ring, bench_memory)
 
 SUITES = {
     "attention": bench_attention,
@@ -46,9 +49,10 @@ SUITES = {
     "niah": bench_niah,
     "serving": bench_serving,
     "ring": bench_ring,
+    "memory": bench_memory,
 }
 
-SNAPSHOT_SUITES = ("attention", "serving", "ring")
+SNAPSHOT_SUITES = ("attention", "serving", "ring", "memory")
 
 
 def _git_sha() -> str:

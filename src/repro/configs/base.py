@@ -8,8 +8,11 @@ are only ever lowered abstractly via the dry-run.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, replace
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
+
+from repro.core.remat import REMAT_POLICIES
 
 
 @dataclass(frozen=True)
@@ -145,12 +148,36 @@ class ModelConfig:
     pos_embedding: str = "rope"      # rope|learned|none
     max_seq_len: int = 131072
     dtype: str = "bfloat16"
-    remat: bool = True               # activation checkpointing per block
+    # Activation-remat policy for the layer scan (core/remat.py):
+    #   "none"  — no checkpointing (autodiff saves every linearization point)
+    #   "full"  — jax.checkpoint(body): save nothing, recompute the layer
+    #   "codes" — jax.checkpoint(body, policy=save_only_these_names): save
+    #             ONLY the compact (n, k) SFA codes (+ lse); the backward
+    #             skips the projection->RoPE->top-k recompute "full" pays.
+    #             Requires a pallas-capable backend (the XLA paths never tag
+    #             the saveables) — elsewhere the scan applies "full" and
+    #             records a "remat" Report (core/reports.py).
+    # Booleans are the deprecated pre-policy axis: True -> "full",
+    # False -> "none" (DeprecationWarning, kept one release).
+    remat: Union[str, bool] = "full"
     # loss chunking (vocab-parallel CE): tokens per chunk
     loss_chunk: int = 512
     # paper Eq. 8: λ for the SFA->dense attention-output MSE regularizer
     # used when adapting dense-pretrained weights (examples/sfa_finetune.py)
     sfa_distill: float = 0.0
+
+    def __post_init__(self):
+        if isinstance(self.remat, bool):
+            warnings.warn(
+                "ModelConfig.remat as a bool is deprecated; use "
+                'remat="none"|"full"|"codes" (bool maps True->"full", '
+                'False->"none" for one release)', DeprecationWarning,
+                stacklevel=3)
+            object.__setattr__(self, "remat",
+                               "full" if self.remat else "none")
+        elif self.remat not in REMAT_POLICIES:
+            raise ValueError(f"remat={self.remat!r}; expected one of "
+                             f"{REMAT_POLICIES}")
 
     @property
     def param_dtype(self):
@@ -190,9 +217,124 @@ class ModelConfig:
             self, name=self.name + "-smoke",
             num_layers=layers, d_model=64,
             d_ff=128, vocab_size=256, attention=att, moe=moe, ssm=ssm,
-            rwkv=rwkv, frontend=fe, max_seq_len=128, remat=False,
+            rwkv=rwkv, frontend=fe, max_seq_len=128, remat="none",
             loss_chunk=64,
         )
+
+
+@dataclass(frozen=True)
+class TrainPolicy:
+    """One validated bundle for every train-time execution-policy axis.
+
+    Six PRs accreted these as loose flags spread over ``ModelConfig.remat``,
+    ``AttentionConfig.{bwd_emit, fwd_fuse, ring}``, ``make_train_step``
+    kwargs and launch CLI switches. ``TrainPolicy`` is the single config
+    object that replaces that sprawl: build one, ``validate()`` it against
+    the model's attention geometry (incoherent combos fail at CONFIG time,
+    not trace time), and ``apply()`` it to a ``ModelConfig`` to get the
+    exact per-layer flags the model code already consumes.
+
+    Fields:
+      * ``remat``    — "none" | "full" | "codes" (core/remat.py).
+      * ``bwd_emit`` — FlashSFA backward emit layout, "dense" | "compact" |
+                       "compact2" (DESIGN.md §3).
+      * ``fwd_fuse`` — fused projection->top-k forward on seam-eligible
+                       layers (DESIGN.md §2).
+      * ``ring``     — Ring-SFA context parallelism over the mesh's seq
+                       axis (DESIGN.md §9).
+      * ``tp``       — tensor-parallel degree the caller intends to run
+                       under (the mesh's "model" axis size); used for
+                       config-time divisibility checks.
+      * ``backend``  — optional attention-backend override
+                       (None = keep ``cfg.attention.backend``).
+    """
+    remat: Union[str, bool] = "full"
+    bwd_emit: str = "dense"
+    fwd_fuse: bool = True
+    ring: bool = False
+    tp: int = 1
+    backend: Optional[str] = None
+
+    @classmethod
+    def from_model(cls, cfg: "ModelConfig", **overrides) -> "TrainPolicy":
+        """The policy a ``ModelConfig`` already encodes, with overrides.
+
+        ``TrainPolicy.from_model(cfg, remat="codes")`` changes exactly one
+        axis and inherits the rest from the config — the round-trip
+        ``from_model(cfg).apply(cfg)`` is the identity (modulo validation).
+        """
+        a = cfg.attention
+        base = dict(remat=cfg.remat,
+                    bwd_emit=a.bwd_emit if a is not None else "dense",
+                    fwd_fuse=a.fwd_fuse if a is not None else True,
+                    ring=a.ring if a is not None else False)
+        base.update(overrides)
+        return cls(**base)
+
+    def validate(self, attention: Optional[AttentionConfig] = None,
+                 ) -> "TrainPolicy":
+        """Reject incoherent combos; returns a normalized policy.
+
+        ``attention`` is the target model's attention config (None for
+        attention-free stacks — then only the attention-independent axes
+        are checked).
+        """
+        remat = self.remat
+        if isinstance(remat, bool):
+            warnings.warn(
+                "TrainPolicy.remat as a bool is deprecated; use "
+                'remat="none"|"full"|"codes"', DeprecationWarning,
+                stacklevel=2)
+            remat = "full" if remat else "none"
+        if remat not in REMAT_POLICIES:
+            raise ValueError(f"TrainPolicy.remat={self.remat!r}; expected "
+                             f"one of {REMAT_POLICIES}")
+        if self.bwd_emit not in ("dense", "compact", "compact2"):
+            raise ValueError(f"TrainPolicy.bwd_emit={self.bwd_emit!r}; "
+                             f'expected "dense" | "compact" | "compact2"')
+        if self.tp < 1:
+            raise ValueError(f"TrainPolicy.tp={self.tp}; expected >= 1")
+        backend = self.backend if self.backend is not None else (
+            attention.backend if attention is not None else None)
+        if remat == "codes":
+            if attention is None or attention.sfa_k is None:
+                raise ValueError(
+                    'remat="codes" saves the SFA top-k codes as checkpoint '
+                    "residuals; the model has no SFA attention (sfa_k unset)")
+            if backend == "xla":
+                raise ValueError(
+                    'remat="codes" requires the pallas backend: only the '
+                    "pallas kernel paths tag the code saveables "
+                    "(core/remat.py), so under backend=\"xla\" the policy "
+                    'would silently degrade to "full"')
+        if self.ring and attention is not None:
+            if attention.sfa_k is None:
+                raise ValueError("ring=True needs an SFA layer (sfa_k unset)")
+            if not attention.causal:
+                raise ValueError("ring=True: the ring hop schedule is the "
+                                 "causal triangle; attention is bidirectional")
+            if attention.mla is not None:
+                raise ValueError("ring=True: MLA latent attention has no "
+                                 "ring path")
+        if self.tp > 1 and attention is not None:
+            if attention.num_heads % self.tp or attention.num_kv_heads % self.tp:
+                raise ValueError(
+                    f"tp={self.tp} does not divide heads "
+                    f"{attention.num_heads}/{attention.num_kv_heads}: the "
+                    f"shard_map'd kernels need whole per-device head slices")
+        return self if remat == self.remat else replace(self, remat=remat)
+
+    def apply(self, cfg: "ModelConfig") -> "ModelConfig":
+        """Validate against ``cfg`` and return the configured model."""
+        pol = self.validate(cfg.attention)
+        updates = {"remat": pol.remat}
+        if cfg.attention is not None:
+            att_updates = {"bwd_emit": pol.bwd_emit, "fwd_fuse": pol.fwd_fuse,
+                           "ring": pol.ring}
+            if pol.backend is not None:
+                att_updates["backend"] = pol.backend
+            updates["attention"] = replace(cfg.attention, **att_updates)
+        return replace(cfg, **updates)
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,172 @@
+"""Remat policies: save compact (n, k) codes, not dense activations.
+
+Long-context pretraining is activation-memory-bound before it is
+FLOPs-bound, and the (n, k) sparse codes SFA already computes are d/k×
+smaller than the dense q/k activations they summarize — which makes them
+ideal checkpoint residuals. This module is the single source of truth for
+the policy enum, the ``checkpoint_name`` saveable vocabulary, and the
+``jax.checkpoint`` policy objects the layer scan applies
+(``repro/models/model.py::_scan_segment``).
+
+Three policies (``ModelConfig.remat``):
+
+  * ``"none"``  — no checkpointing: autodiff saves every linearization
+                  point per layer (dense qkv, attention internals, MLP
+                  hidden — O(n·(d + d_ff)) residual bytes per layer).
+  * ``"full"``  — ``jax.checkpoint(body)``: nothing saved beyond the scan
+                  carry; the whole layer (projection → RoPE → top-k →
+                  FlashSFA → MLP) is re-run in the backward pass.
+  * ``"codes"`` — ``jax.checkpoint(body, policy=save_only_these_names)``:
+                  the compact (n, k) top-k code values+indices (and the
+                  (n,) per-row LSE stats) are saved as the ONLY named
+                  residuals. The backward recomputes the dense views
+                  in-tile through the existing proj_rtopk / compact-seam
+                  machinery — dense (n, d) q/k are never rebuilt (their
+                  top-k is already known) and never held across the layer
+                  scan. Residual cost over "full" is the d/k-compressed
+                  code set; backward compute cost drops by the whole
+                  projection→RoPE→top-k recompute "full" pays.
+
+The names below are applied with ``jax.ad_checkpoint.checkpoint_name`` at
+the kernel chokepoints (``kernels/ops.py::_sfa_pallas_fwd``,
+``kernels/ops.py::fused_qk_codes`` consumers) — inside the seam custom_vjp
+fwd rules, which ``jax.checkpoint``'s partial-eval recurses into, so the
+saved codes make the backward skip the seam-forward re-run entirely.
+
+The saveable set deliberately contains NO dense (n, d) q/k names: the
+grep-able contract is pinned by tests/test_remat_policy.py (name-list
+equality AND a jaxpr audit that every ``name_p``-tagged saveable has a
+k-width, not d-width, trailing axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core import reports
+
+# Remat policy enum (ModelConfig.remat / TrainPolicy.remat).
+REMAT_POLICIES = ("none", "full", "codes")
+
+# The "codes" policy's saveable vocabulary — compact (n, k) code tensors
+# plus the (n,) per-row attention stats. Nothing here may ever be a dense
+# (n, d) activation (tests/test_remat_policy.py greps this tuple).
+CODE_SAVEABLES = (
+    "sfa_q_code_vals",       # (b·h, n, k)   top-k q values
+    "sfa_q_code_idx",        # (b·h, n, k)   their coordinates
+    "sfa_k_code_vals",       # (b·h, n, k)   top-k k values
+    "sfa_k_code_idx",        # (b·h, n, k)   their coordinates
+    "sfa_lse",               # (b·h, n)      per-row log-sum-exp stats
+)
+
+
+def normalize_remat(remat) -> str:
+    """Coerce a ``remat`` value to a policy name.
+
+    Accepts the policy names plus the deprecated booleans (the pre-policy
+    ``ModelConfig.remat: bool`` axis): True -> "full", False -> "none".
+    The DeprecationWarning for bool configs is raised at config-build time
+    (configs/base.py), not here — this is the hot normalization path.
+    """
+    if remat is True:
+        return "full"
+    if remat is False or remat is None:
+        return "none"
+    if remat not in REMAT_POLICIES:
+        raise ValueError(
+            f"remat={remat!r}; expected one of {REMAT_POLICIES} "
+            f"(or a deprecated bool)")
+    return remat
+
+
+def _tag_idx(idx, name):
+    """Tag code coordinates in their narrowest storable form.
+
+    Coordinates index head_dim (<= 2**15 for every supported geometry, and
+    ``rtopk`` asserts d fits int32 anyway), so the saved residual is int16 —
+    halving the stored index bytes. The widen-back cast is recomputed in the
+    backward for free; on the "none"/"full" paths XLA folds the roundtrip.
+    """
+    return checkpoint_name(idx.astype(jnp.int16), name).astype(idx.dtype)
+
+
+def tag_q_codes(qv, qi):
+    """Name the compact q-code pair as "codes"-policy saveables."""
+    return (checkpoint_name(qv, "sfa_q_code_vals"),
+            _tag_idx(qi, "sfa_q_code_idx"))
+
+
+def tag_k_codes(kv, ki):
+    """Name the compact k-code pair as "codes"-policy saveables.
+
+    Call this at the NARROWEST width the codes exist at — in the fused
+    projection path that is BEFORE the GQA group-repeat (hkv heads, not h),
+    so the policy never stores the group-redundant copies.
+    """
+    return (checkpoint_name(kv, "sfa_k_code_vals"),
+            _tag_idx(ki, "sfa_k_code_idx"))
+
+
+def tag_codes(qv, qi, kv, ki):
+    """Name the four compact code tensors as "codes"-policy saveables.
+
+    ``checkpoint_name`` is identity outside a policy'd ``jax.checkpoint``,
+    so the tags are free on the "none"/"full" paths. Call this at every
+    point where the (n, k) codes come into existence (post-rtopk, post-
+    fused-projection) so the policy sees them regardless of which forward
+    produced them.
+    """
+    return (*tag_q_codes(qv, qi), *tag_k_codes(kv, ki))
+
+
+def tag_lse(lse):
+    """Name the per-row LSE stats as a "codes"-policy saveable."""
+    return checkpoint_name(lse, "sfa_lse")
+
+
+def checkpoint_policy(remat: str):
+    """The ``jax.checkpoint`` ``policy=`` object for a policy name.
+
+    Returns None for "none" (no checkpointing at all) and for "full"
+    (checkpoint with the default nothing-saveable policy).
+    """
+    if normalize_remat(remat) == "codes":
+        return jax.checkpoint_policies.save_only_these_names(*CODE_SAVEABLES)
+    return None
+
+
+# --------------------------------------------------------------------------
+# routing reports — the "remat" component of core/reports.py
+# --------------------------------------------------------------------------
+
+_REMAT_REPORTS: dict = {}
+
+
+def record_remat(where: str, requested: str, applied: str,
+                 reason=None) -> None:
+    """Record one (deduped) remat-policy routing decision.
+
+    ``requested`` is the configured policy, ``applied`` what the scan
+    actually uses — they differ when ``"codes"`` is requested on a stack
+    whose kernels never tag the code saveables (non-pallas backend, no SFA
+    layer): saving nothing named degrades silently to ``"full"`` semantics,
+    so the scan applies "full" explicitly and records why.
+    """
+    key = (where, requested, applied, reason)
+    if key not in _REMAT_REPORTS:
+        _REMAT_REPORTS[key] = reports.make_report(
+            "remat", where, eligible=(requested == applied), reason=reason,
+            details={"requested": requested, "applied": applied})
+
+
+def _collect_remat_reports():
+    return tuple(_REMAT_REPORTS.values())
+
+
+def clear_remat_reports() -> None:
+    _REMAT_REPORTS.clear()
+
+
+reports.register_provider("remat", _collect_remat_reports,
+                          clear_remat_reports)

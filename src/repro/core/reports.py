@@ -1,0 +1,95 @@
+"""Unified trace-time routing/eligibility reports (DESIGN.md §10).
+
+Six PRs grew three parallel report types — ``backends.FallbackReport``
+(requested backend could not serve a request), ``attention.CompactSeamReport``
+(fused compact-backward seam taken or not), ``attention.RingReport``
+(Ring-SFA context parallelism engaged or not) — each with its own dedup
+dict, query function and clear function. This module is the one protocol
+they all speak and the one place callers query:
+
+  * ``Report`` — the normalized record: ``component`` (which subsystem made
+    the routing decision), ``where`` (the site, e.g. ``"llama3/attention"``),
+    ``eligible`` (did the requested fast path engage), ``reason`` (human
+    explanation when it did not), ``details`` (component-specific extras as
+    a plain dict: selected backend, fused-forward flag, ...).
+  * ``register_provider(component, collect, clear)`` — each subsystem
+    registers an adapter that converts its native records to ``Report``s.
+    Registration happens at subsystem import time; the underlying dedup
+    dicts stay where they are (the adapters are read-only views).
+  * ``collect_reports(component=None)`` — THE query entry point for launch
+    scripts and tests: every routing decision since the last clear, across
+    all registered components (or one).
+  * ``clear_reports(component=None)`` — reset between traces/tests.
+
+The native query functions (``fallback_reports()`` etc.) keep working — the
+protocol wraps them rather than replacing them — but new call sites should
+go through ``collect_reports()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Report:
+    """One normalized routing/eligibility decision."""
+    component: str                   # "backend" | "compact_seam" | "ring" | "remat"
+    where: str                       # site, e.g. "llama3.2-3b/attention"
+    eligible: bool                   # requested fast path engaged?
+    reason: Optional[str] = None     # set when not eligible
+    details: Tuple[Tuple[str, Any], ...] = ()   # sorted extra fields
+
+    def detail(self, key: str, default=None):
+        for k, v in self.details:
+            if k == key:
+                return v
+        return default
+
+
+def _freeze_details(details: Optional[Dict[str, Any]]) -> tuple:
+    if not details:
+        return ()
+    return tuple(sorted(details.items()))
+
+
+def make_report(component: str, where: str, eligible: bool,
+                reason: Optional[str] = None,
+                details: Optional[Dict[str, Any]] = None) -> Report:
+    return Report(component=component, where=where, eligible=eligible,
+                  reason=reason, details=_freeze_details(details))
+
+
+_PROVIDERS: Dict[str, Tuple[Callable[[], Tuple[Report, ...]],
+                            Callable[[], None]]] = {}
+
+
+def register_provider(component: str,
+                      collect: Callable[[], Tuple[Report, ...]],
+                      clear: Callable[[], None]) -> None:
+    """Register (or replace) a component's report adapter."""
+    _PROVIDERS[component] = (collect, clear)
+
+
+def components() -> Tuple[str, ...]:
+    return tuple(sorted(_PROVIDERS))
+
+
+def collect_reports(component: Optional[str] = None) -> Tuple[Report, ...]:
+    """Every routing decision since the last clear, across all components
+    (or just ``component``). Order: by component name, then provider order."""
+    if component is not None:
+        collect, _ = _PROVIDERS[component]
+        return tuple(collect())
+    out: list[Report] = []
+    for name in components():
+        out.extend(_PROVIDERS[name][0]())
+    return tuple(out)
+
+
+def clear_reports(component: Optional[str] = None) -> None:
+    if component is not None:
+        _PROVIDERS[component][1]()
+        return
+    for name in components():
+        _PROVIDERS[name][1]()

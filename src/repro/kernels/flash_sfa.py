@@ -208,9 +208,17 @@ def _tile_occupancy(vals, idx, d: int, nblocks: int, block: int):
     """
     bh, n, kq = idx.shape
     flat_idx = idx.reshape(bh, nblocks, block * kq)
-    oh = jax.nn.one_hot(flat_idx, d, dtype=jnp.float32)
-    live = (vals.reshape(bh, nblocks, block * kq, 1) != 0)
-    return jnp.max(oh * live.astype(jnp.float32), axis=2)
+    live = (vals.reshape(bh, nblocks, block * kq) != 0).astype(jnp.float32)
+    # Scatter-max, NOT one_hot: the one-hot form materializes a
+    # (bh, nblocks, block·k, d) f32 intermediate — O(n·k·d) bytes, 400MB+ at
+    # (bh=24, n=2048, d=128) — which dwarfs the codes themselves and used to
+    # set the whole train step's peak memory. The scatter touches only the
+    # (bh, nblocks, block·k) updates and the (bh, nblocks, d) output,
+    # keeping the pre-pass at the O(n·k) bytes the module docstring promises.
+    occ = jnp.zeros((bh, nblocks, d), jnp.float32)
+    return occ.at[jnp.arange(bh)[:, None, None],
+                  jnp.arange(nblocks)[None, :, None],
+                  flat_idx].max(live, mode="drop")
 
 
 def _block_maps(q_vals, q_idx, k_vals, k_idx, *, d: int, causal: bool,

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as att
+from repro.core.remat import tag_codes, tag_k_codes, tag_lse, tag_q_codes
 from repro.distributed.shard import (
     run_tp, tp_flash_sfa, tp_flash_sfa_bwd, tp_proj_rtopk,
 )
@@ -90,6 +91,13 @@ def fused_qk_codes(x, w, positions, *, h, hkv, hd, sfa_k, rope_spec=None):
     wk = jnp.moveaxis(w[:, h * hd:(h + hkv) * hd].reshape(m, hkv, hd), 1, 0)
     qv, qi = tp_proj_rtopk(x, wq, positions, k=sfa_k, rope_spec=rope_spec)
     kv_, ki = tp_proj_rtopk(x, wk, positions, k=sfa_k, rope_spec=rope_spec)
+    # name the codes as remat="codes" saveables (identity otherwise): the
+    # checkpoint policy saves these (n, k) tensors so the backward never
+    # re-runs the fused projection->rope->top-k pass (core/remat.py). The
+    # k codes are tagged BEFORE the GQA group-repeat — the policy stores
+    # them at hkv width and the backward recomputes the repeat for free.
+    qv, qi = tag_q_codes(qv, qi)
+    kv_, ki = tag_k_codes(kv_, ki)
     if hkv != h:
         kv_ = jnp.repeat(kv_, h // hkv, axis=1)
         ki = jnp.repeat(ki, h // hkv, axis=1)
@@ -103,12 +111,17 @@ def _sfa_pallas_fwd(q, k, v, sfa_k, causal, scale, return_residuals=False):
     qf, kf, vf = fold_heads(q), fold_heads(k), fold_heads(v)
     qv, qi = run_tp(lambda xx: rtopk(xx, sfa_k), (qf,), (0,), (0, 0))
     kv_, ki = run_tp(lambda xx: rtopk(xx, sfa_k), (kf,), (0,), (0, 0))
+    # remat="codes" saveable names (identity tags otherwise, core/remat.py):
+    # under the codes checkpoint policy only these (n, k) tensors (+ lse)
+    # survive the forward — dense q/k/v and out are rebuilt in the backward.
+    qv, qi, kv_, ki = tag_codes(qv, qi, kv_, ki)
     if not return_residuals:
         out = tp_flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal,
                            scale=scale)
         return unfold_heads(out, b, h)
     out, lse = tp_flash_sfa(qv, qi, kv_, ki, vf, d=d, causal=causal,
                             scale=scale, return_residuals=True)
+    lse = tag_lse(lse)
     # The kernel backward needs only the codes + folded v + (out, lse); the
     # dense q/k/v are NOT saved (shapes/dtypes are recoverable from g and
     # the codes), keeping residual memory at the FA2 contract.

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
+from repro.configs.base import TrainPolicy
 from repro.data import DataConfig, markov_batch
 from repro.distributed.sharding import axis_rules
 from repro.launch import specs as S
@@ -62,6 +63,14 @@ def main():
                          "skipping (DESIGN.md §2; config default: on)")
     ap.add_argument("--no-fwd-fuse", dest="fwd_fuse", action="store_false",
                     help="force the unfused rtopk+FlashSFA composition")
+    ap.add_argument("--remat", default=None,
+                    choices=["none", "full", "codes"],
+                    help="checkpoint policy for the layer scan "
+                         "(core/remat.py): none = save every linearization "
+                         "point; full = recompute whole layers; codes = "
+                         "save only the compact (n, k) SFA codes as named "
+                         "residuals — d/k x smaller than the dense q/k "
+                         "they summarize (DESIGN.md §10)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -84,11 +93,18 @@ def main():
                                total_steps=args.steps)
         dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                           global_batch=args.batch)
+        overrides = {"tp": args.tp, "backend": args.attn_backend}
+        if args.remat is not None:
+            overrides["remat"] = args.remat
+        if args.bwd_emit is not None:
+            overrides["bwd_emit"] = args.bwd_emit
+        if args.fwd_fuse is not None:
+            overrides["fwd_fuse"] = args.fwd_fuse
+        if args.ring > 1:
+            overrides["ring"] = True
+        policy = TrainPolicy.from_model(cfg, **overrides)
         step = jax.jit(
-            make_train_step(cfg, ocfg, attn_backend=args.attn_backend,
-                            bwd_emit=args.bwd_emit,
-                            fwd_fuse=args.fwd_fuse,
-                            ring=True if args.ring > 1 else None),
+            make_train_step(cfg, ocfg, policy=policy),
             in_shardings=(sh(pspec),
                           sh(type(opt)(step=P(), m=pspec, v=pspec)),
                           None),

@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.configs.base import AttentionConfig, ModelConfig
 from repro.core.attention import chunked_attention
+from repro.core import reports as _ureports
+from repro.core.remat import tag_lse
 from repro.core.kv_cache import (
     DenseKV, FeatureMajorKV, KVCache, MLAKV, MLASparseKV, PagedDenseKV,
     PagedFeatureMajorKV, PagedKV, PagedMLAKV, PagedMLASparseKV, PagedSparseKV,
@@ -51,7 +53,7 @@ from repro.core.kv_cache import (
 from repro.core.sparse import topk_st, sparsify, SparseCode
 from repro.distributed.ring import ring_degree, ring_sfa_op
 from repro.distributed.shard import replicate, tp_flash_sfa, tp_flash_sfa_bwd
-from repro.distributed.sharding import axis_size, constrain, current_mesh
+from repro.distributed.sharding import axis_size, constrain
 from repro.kernels.flash_sfa_bwd import pair_closure_indices
 from repro.kernels.flash_sfa_decode import LANES as _FM_TILE, \
     feature_major_prefill
@@ -60,7 +62,7 @@ from repro.kernels.ops import (
 )
 from repro.models.backends import (
     AttentionRequest, DecodeQuery, expand_kv as _expand_kv, get_backend,
-    select_backend,
+    resolve_backend_name, select_backend,
 )
 from repro.models.layers import (
     dense, dense_init, norm_init, apply_norm, rope, rope_code_vjp,
@@ -214,6 +216,32 @@ def compact_train_eligible(cfg: ModelConfig, window=None) -> bool:
     return compact_seam_ineligible_reason(cfg, window) is None
 
 
+def remat_codes_ineligible_reason(cfg: ModelConfig) -> Optional[str]:
+    """None when the stack can honour ``remat="codes"``; else a reason.
+
+    The "codes" policy saves only ``checkpoint_name``-tagged saveables
+    (core/remat.py::CODE_SAVEABLES), and only the SFA kernel paths
+    (kernels/ops.py) tag them. On a stack whose forward never produces the
+    tags, ``save_only_these_names`` saves nothing — silently identical to
+    "full" but with the user believing codes are banked — so the layer scan
+    degrades to "full" *explicitly* and records why (``record_remat``).
+    """
+    a = cfg.attention
+    if a is None or a.sfa_k is None:
+        return "not an SFA stack (sfa_k unset): no code saveables to tag"
+    if a.mla is not None:
+        return "MLA latent attention bypasses the code-tagging q/k paths"
+    if compact_seam_ineligible_reason(cfg) is None:
+        return None          # fused seam tags codes whatever the backend
+    resolved = resolve_backend_name(
+        a.backend, _request(a, mode="full", window=None))
+    if resolved != "pallas":
+        return (f"backend {a.backend!r} resolves to {resolved!r} for train "
+                f"forwards: only the pallas kernel paths (and the fused "
+                f"seam, ineligible here) tag the code saveables")
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
 class CompactSeamReport:
     """Structured record of a compact-seam routing decision (trace-time).
@@ -307,6 +335,30 @@ def _record_ring(where: str, taken: bool, reason: Optional[str]) -> None:
                                         reason=reason)
 
 
+# unified report protocol (core/reports.py): read-only adapters exposing the
+# native seam/ring records as "compact_seam"/"ring" components. The native
+# accessors (``compact_seam_reports()`` etc.) keep working.
+def _collect_seam_reports():
+    return tuple(
+        _ureports.make_report("compact_seam", r.where, eligible=r.taken,
+                              reason=r.reason,
+                              details={"fused_fwd": r.fused_fwd})
+        for r in compact_seam_reports())
+
+
+def _collect_ring_reports():
+    return tuple(
+        _ureports.make_report("ring", r.where, eligible=r.taken,
+                              reason=r.reason)
+        for r in ring_reports())
+
+
+_ureports.register_provider("compact_seam", _collect_seam_reports,
+                            clear_compact_seam_reports)
+_ureports.register_provider("ring", _collect_ring_reports,
+                            clear_ring_reports)
+
+
 def _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k, causal,
                               scale, rope_spec, fwd_fuse=False):
     """Primal: qkv projection [-> rope] -> GQA expand -> ops.py's pallas
@@ -330,7 +382,7 @@ def _sfa_proj_attend_fwd_impl(w, x, positions, h, hkv, hd, sfa_k, causal,
                                 scale=scale, return_residuals=True,
                                 block_skip=True)
         return (unfold_heads(out, b, h),
-                (x, w, positions, qv, qi, kv_, ki, vf, out, lse))
+                (x, w, positions, qv, qi, kv_, ki, vf, out, tag_lse(lse)))
     qkv = x @ w.astype(dt)
     q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
     q = q.reshape(b, n, h, hd)
@@ -580,7 +632,11 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
         raise NotImplementedError(
             f"{mode} mode does not cover MLA caches — serve MLA configs "
             f"through whole-prompt prefill (insert_pages), non-speculative")
-    wants_seam = (mode == "train" and a is not None and a.sfa_k is not None
+    # "eval" is a gradient-free train-shape forward (long-context scoring);
+    # it rides the train execution paths — seam, ring, remat — everywhere
+    # except the distill loss term, which only exists under the loss.
+    wants_seam = (mode in ("train", "eval") and a is not None
+                  and a.sfa_k is not None
                   and a.bwd_emit in ("compact", "compact2"))
     if a.mla is not None:
         if wants_seam:
@@ -723,7 +779,7 @@ def attention_apply(params, x, *, cfg: ModelConfig, positions=None,
     # AND bwd — kernels/flash_sfa_bwd.py); windowed / rope-protected layers
     # fall back to the XLA path via the registry (structured report).
     o = None
-    if mode == "train" and a.sfa_k is not None and a.ring:
+    if mode in ("train", "eval") and a.sfa_k is not None and a.ring:
         # Ring-SFA context parallelism (distributed/ring.py): the rope'd
         # dense q/k fold and shard over the seq mesh axis; rtopk and the
         # hop loop run per shard inside the ring's shard_map, rotating

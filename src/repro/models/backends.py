@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import reports as _reports
 from repro.core.attention import chunked_attention, NEG_INF
 from repro.core.kv_cache import (
     FeatureMajorKV, KVCache, MLAKV, MLASparseKV, PagedFeatureMajorKV,
@@ -635,6 +636,24 @@ def clear_fallback_reports() -> None:
     _FALLBACKS.clear()
 
 
+def resolve_backend_name(name: str, req: AttentionRequest) -> str:
+    """Pure resolution: which backend *would* serve ``req`` under ``name``.
+
+    Same routing as ``select_backend`` but with no fallback recording or
+    logging — for eligibility probes (e.g. the ``remat="codes"`` check asks
+    whether the stack's forward runs through the code-tagging pallas paths
+    without charging a FallbackReport to a site that never traces)."""
+    if name == "auto":
+        for nm in _AUTO_ORDER:
+            b = _REGISTRY.get(nm)
+            if b is not None and b.unsupported_reason(req) is None:
+                return nm
+        return "xla"
+    if get_backend(name).unsupported_reason(req) is None:
+        return name
+    return "xla"
+
+
 def select_backend(name: str, req: AttentionRequest, *,
                    where: str = "") -> BackendSelection:
     """Resolve a backend name (or "auto") against a request.
@@ -666,3 +685,19 @@ def select_backend(name: str, req: AttentionRequest, *,
             name, fallback.name, reason, req.mode,
             f", at {where}" if where else "", name, fallback.name)
     return BackendSelection(fallback, name, reason)
+
+
+# unified report protocol (core/reports.py): every FallbackReport is a
+# not-eligible routing decision of the "backend" component. The native
+# ``fallback_reports()`` accessor stays; this is a read-only view.
+def _collect_backend_reports():
+    return tuple(
+        _reports.make_report(
+            "backend", f.where, eligible=False, reason=f.reason,
+            details={"requested": f.requested, "selected": f.selected,
+                     "mode": f.request.mode})
+        for f in fallback_reports())
+
+
+_reports.register_provider("backend", _collect_backend_reports,
+                           clear_fallback_reports)

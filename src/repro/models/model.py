@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.remat import checkpoint_policy, normalize_remat, record_remat
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
 from repro.models import layers as L
@@ -250,8 +251,23 @@ def _scan_segment(seg_params, x, cfg: ModelConfig, kind: str, count: int,
                 cache=cache, cache_len=cache_len, slot=slot)
         return (x, aux + aux_i), new_cache
 
-    if cfg.remat and mode == "train":
-        body = jax.checkpoint(body)
+    # Remat applies to gradient-free "eval" forwards too (long-context
+    # scoring is activation-memory-bound the same way training is); the
+    # cache-carrying serving modes never checkpoint.
+    rm = normalize_remat(cfg.remat)
+    if rm != "none" and mode in ("train", "eval"):
+        applied = rm
+        if rm == "codes":
+            reason = attn.remat_codes_ineligible_reason(cfg)
+            if reason is not None:
+                # nothing in this stack tags the code saveables: a named
+                # policy would silently save nothing. Degrade to "full"
+                # explicitly and say why (reports component "remat").
+                applied = "full"
+            record_remat(f"{cfg.name}/scan[{kind}]", rm, applied, reason)
+        pol = checkpoint_policy(applied)
+        body = (jax.checkpoint(body, policy=pol) if pol is not None
+                else jax.checkpoint(body))
 
     if windows is not None:
         xs = (seg_params, windows, caches) if caches is not None \

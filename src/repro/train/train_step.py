@@ -6,28 +6,34 @@ with optional microbatch gradient accumulation (lax.scan over microbatches —
 constant memory in accumulation steps) and optional top-k gradient
 compression with error feedback before the DP mean.
 
-``attn_backend`` overrides ``cfg.attention.backend`` (a registry name from
-repro/models/backends.py) for the whole step — ``attn_backend="pallas"``
-trains through the Pallas FlashSFA forward AND backward kernels (fwd+bwd
-speedups measured end-to-end, see benchmarks/bench_pretrain.py), ``"xla"``
-forces the pure-JAX path. ``bwd_emit`` likewise overrides
-``cfg.attention.bwd_emit``: ``"compact"`` makes the FlashSFA backward write
-(n, k) code-gradients and — on eligible layers, RoPE'd ones included, which
-auto-widen to the (n, 2k) pair-closure emit rotated through
-``rope_code_vjp`` — routes the projection backward through the compact-code
-seam (kernels/code_grad.py), cutting the attention backward's dQ/dK write
-traffic from O(n·d) to O(n·k). Weight gradients stay dense: the sparsity is
-consumed at the projection vjp, so the AdamW update is unchanged.
+The execution-policy axes (remat, backend, bwd_emit, fwd_fuse, ring) are
+configured through ONE object: pass ``policy=TrainPolicy(...)``
+(configs/base.py). ``TrainPolicy.validate()`` runs against the model's
+attention geometry inside ``apply()``, so incoherent combos (e.g.
+``remat="codes"`` on an xla backend, ``tp`` that doesn't divide the heads)
+fail here at step-build time, not at trace time. ``"compact"`` bwd_emit
+makes the FlashSFA backward write (n, k) code-gradients and — on eligible
+layers, RoPE'd ones included, which auto-widen to the (n, 2k) pair-closure
+emit rotated through ``rope_code_vjp`` — routes the projection backward
+through the compact-code seam (kernels/code_grad.py), cutting the attention
+backward's dQ/dK write traffic from O(n·d) to O(n·k). Weight gradients stay
+dense: the sparsity is consumed at the projection vjp, so the AdamW update
+is unchanged.
+
+The pre-policy loose kwargs (``attn_backend=``, ``bwd_emit=``,
+``fwd_fuse=``, ``ring=``) keep working for one release with a
+DeprecationWarning; they cannot be mixed with ``policy=``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, TrainPolicy
 from repro.distributed import compression
 from repro.models import loss_fn
 from repro.optim import OptimizerConfig, make_optimizer
@@ -54,14 +60,38 @@ def _override_attn_backend(cfg: ModelConfig, attn_backend: Optional[str],
         cfg, attention=dataclasses.replace(cfg.attention, **updates))
 
 
+def _resolve_policy(cfg: ModelConfig, policy: Optional[TrainPolicy],
+                    attn_backend, bwd_emit, fwd_fuse, ring) -> ModelConfig:
+    """One configured ModelConfig from either the policy or legacy kwargs."""
+    legacy = {k: v for k, v in [("attn_backend", attn_backend),
+                                ("bwd_emit", bwd_emit),
+                                ("fwd_fuse", fwd_fuse), ("ring", ring)]
+              if v is not None}
+    if policy is not None:
+        if legacy:
+            raise ValueError(
+                f"pass policy= OR the legacy kwargs, not both "
+                f"(got policy and {sorted(legacy)})")
+        return policy.apply(cfg)
+    if legacy:
+        warnings.warn(
+            f"make_train_step({', '.join(sorted(legacy))}=...) is "
+            f"deprecated; pass policy=TrainPolicy(...) instead "
+            f"(one release of aliasing)", DeprecationWarning, stacklevel=3)
+        return _override_attn_backend(cfg, attn_backend, bwd_emit, fwd_fuse,
+                                      ring)
+    return cfg
+
+
 def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                     accum_steps: int = 1,
                     grad_compression: Optional[float] = None,
+                    policy: Optional[TrainPolicy] = None,
                     attn_backend: Optional[str] = None,
                     bwd_emit: Optional[str] = None,
                     fwd_fuse: Optional[bool] = None,
                     ring: Optional[bool] = None):
-    cfg = _override_attn_backend(cfg, attn_backend, bwd_emit, fwd_fuse, ring)
+    cfg = _resolve_policy(cfg, policy, attn_backend, bwd_emit, fwd_fuse, ring)
     update = make_optimizer(opt_cfg)
 
     def compute_grads(params, batch):
@@ -99,8 +129,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     return step
 
 
-def make_eval_step(cfg: ModelConfig, *, attn_backend: Optional[str] = None):
-    cfg = _override_attn_backend(cfg, attn_backend)
+def make_eval_step(cfg: ModelConfig, *, policy: Optional[TrainPolicy] = None,
+                   attn_backend: Optional[str] = None):
+    cfg = _resolve_policy(cfg, policy, attn_backend, None, None, None)
 
     def step(params, batch):
         loss, metrics = loss_fn(params, batch, cfg)

@@ -7,7 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, TrainPolicy
 from repro.data import DataConfig, markov_batch, copy_batch
 from repro.models import init as model_init
 from repro.optim import OptimizerConfig, init_opt_state
@@ -24,13 +24,13 @@ class TrainerConfig:
     accum_steps: int = 1
     grad_compression: Optional[float] = None
     data_kind: str = "markov"
-    # None = use cfg.attention.backend; "pallas" = train fwd+bwd through the
-    # Pallas kernels; "xla" = force the pure-JAX path (registry names,
-    # repro/models/backends.py).
+    # One validated bundle for every execution-policy axis — remat, backend,
+    # bwd_emit, fwd_fuse, ring, tp (configs/base.py::TrainPolicy). None =
+    # run the ModelConfig exactly as configured.
+    policy: Optional[TrainPolicy] = None
+    # Deprecated (one release of aliasing): pre-policy loose overrides.
+    # None = use cfg.attention.backend / cfg.attention.bwd_emit.
     attn_backend: Optional[str] = None
-    # None = use cfg.attention.bwd_emit; "compact" = FlashSFA backward emits
-    # (n, k) code-gradients consumed by the projection seam — rope'd layers
-    # auto-widen to the (n, 2k) pair-closure emit (DESIGN.md §3).
     bwd_emit: Optional[str] = None
     ft: FTConfig = dataclasses.field(default_factory=FTConfig)
 
@@ -49,7 +49,7 @@ class Trainer:
                           if tcfg.grad_compression else None)
         self.step_fn = jax.jit(make_train_step(
             cfg, opt_cfg, accum_steps=tcfg.accum_steps,
-            grad_compression=tcfg.grad_compression,
+            grad_compression=tcfg.grad_compression, policy=tcfg.policy,
             attn_backend=tcfg.attn_backend, bwd_emit=tcfg.bwd_emit))
         self._batch_fn = (markov_batch if tcfg.data_kind == "markov"
                           else copy_batch)

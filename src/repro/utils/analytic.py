@@ -15,6 +15,7 @@ from __future__ import annotations
 
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.remat import normalize_remat
 from repro.models.model import segments
 from repro.serve.kv_cache import cache_bytes_per_token
 
@@ -187,7 +188,10 @@ def step_flops(cfg: ModelConfig, shape: ShapeConfig) -> dict:
             li += count
     fwd += 2 * cfg.d_model * cfg.vocab_size * tokens      # logits
     if shape.kind == "train":
-        mult = 3 + (1 if cfg.remat else 0)                # fwd+bwd(2x)+remat
+        # fwd + bwd(2x) + one remat recompute under any remat policy
+        # ("codes" skips only the projection->top-k slice of it — second-
+        # order for a FLOPs napkin, so both policies count the full pass)
+        mult = 3 + (1 if normalize_remat(cfg.remat) != "none" else 0)
         total = fwd * mult
         model = 6.0 * pc["active"] * tokens
     else:

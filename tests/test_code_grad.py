@@ -161,6 +161,7 @@ def test_train_step_compact_matches_dense_emit(rng):
     covers the same seam at the attention_apply level above."""
     from repro.models import init as model_init
     from repro.optim import OptimizerConfig, init_opt_state
+    from repro.configs.base import TrainPolicy
     from repro.train.train_step import make_train_step
 
     cfg = _cfg(2, 2)
@@ -171,7 +172,8 @@ def test_train_step_compact_matches_dense_emit(rng):
     batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
     outs = {}
     for emit in ("dense", "compact"):
-        step = make_train_step(cfg, opt, bwd_emit=emit)
+        step = make_train_step(
+            cfg, opt, policy=TrainPolicy.from_model(cfg, bwd_emit=emit))
         p2, _, metrics = step(params, init_opt_state(params), batch)
         outs[emit] = (p2, metrics["loss"])
     np.testing.assert_allclose(float(outs["dense"][1]),

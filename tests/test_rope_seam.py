@@ -29,8 +29,8 @@ from repro.kernels import ref as REF
 from repro.kernels.code_grad import scatter_code_grads
 from repro.kernels.flash_sfa import flash_sfa
 from repro.kernels.flash_sfa_bwd import flash_sfa_bwd, pair_closure_indices
+from repro.core import reports as U
 from repro.models import attention as attn
-from repro.models import backends as B
 from repro.models.layers import rope, rope_code_vjp
 
 ATOL = 1e-4
@@ -259,8 +259,7 @@ def test_seam_eligibility_matrix(rng):
     ``CompactSeamReport`` naming the blocking feature, and the window/MLA
     combinations additionally surface the backend's own ``FallbackReport``
     (pallas -> xla)."""
-    attn.clear_compact_seam_reports()
-    B.clear_fallback_reports()
+    U.clear_reports()           # one call resets every component
     for rope_on, qk_norm, mla, window in itertools.product(
             (False, True), (False, True), (False, True), (None, 16)):
         cfg = _matrix_cfg(rope_on, qk_norm, mla, window)
@@ -269,11 +268,12 @@ def test_seam_eligibility_matrix(rng):
                               (1, 64, cfg.d_model))
         attn.attention_apply(params, x, cfg=cfg, mode="train")
         expect_seam = not qk_norm and not mla and window is None
-        reports = [r for r in attn.compact_seam_reports()
+        reports = [r for r in U.collect_reports("compact_seam")
                    if r.where == f"{cfg.name}/attention"]
         assert len(reports) == 1, (cfg.name, reports)
         r = reports[0]
-        assert r.taken == expect_seam, (cfg.name, r)
+        assert r.component == "compact_seam"
+        assert r.eligible == expect_seam, (cfg.name, r)
         if expect_seam:
             assert r.reason is None
         else:
@@ -282,12 +282,15 @@ def test_seam_eligibility_matrix(rng):
             assert blocker.lower().split("-")[0] in r.reason.lower(), r
         if window is not None and not mla:
             # windowed pallas request falls back to the xla oracle at the
-            # backend layer too — both report surfaces stay consistent
-            assert any(f.requested == "pallas" and f.selected == "xla"
-                       and f.request.window
-                       for f in B.fallback_reports()), cfg.name
-    attn.clear_compact_seam_reports()
-    B.clear_fallback_reports()
+            # backend layer too — both report surfaces stay consistent,
+            # and the unified protocol carries the backend's extras
+            assert any(f.detail("requested") == "pallas"
+                       and f.detail("selected") == "xla" and not f.eligible
+                       for f in U.collect_reports("backend")), cfg.name
+    # the unified collector sees every component's records in one call
+    assert {r.component for r in U.collect_reports()} >= {"backend",
+                                                          "compact_seam"}
+    U.clear_reports()
 
 
 def test_seam_reports_dedupe():
